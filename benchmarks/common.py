@@ -1,0 +1,34 @@
+"""Shared benchmark harness helpers."""
+import json
+import os
+import time
+
+import numpy as np
+
+
+def timed(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / iters
+
+
+def block_until_ready(x):
+    import jax
+    jax.tree_util.tree_map(
+        lambda a: a.block_until_ready() if hasattr(a, "block_until_ready")
+        else a, x)
+    return x
+
+
+def save_rows(name, rows):
+    os.makedirs("results/bench", exist_ok=True)
+    with open(f"results/bench/{name}.json", "w") as f:
+        json.dump(rows, f, indent=2, default=float)
+    return rows
+
+
+def csv_line(name, us_per_call, derived):
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,52 @@
+"""Summarise results/dryrun/*.json into the §Roofline table (markdown +
+console) and rank cells by roofline fraction / bottleneck."""
+import glob
+import json
+import sys
+
+
+def load(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(f"results/dryrun/*__{mesh}.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "status": r.get("error", "error")})
+            continue
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "t_compute": ro["t_compute_s"], "t_memory": ro["t_memory_s"],
+            "t_collective": ro["t_collective_s"],
+            "bottleneck": ro["bottleneck"],
+            "useful": ro["useful_flops_ratio"],
+            "frac": ro["roofline_fraction"],
+            "peak_gb": r["memory"]["peak_bytes_per_device"] / 1e9,
+            "compile_s": r.get("compile_s", 0),
+        })
+    return rows
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    rows = load(mesh)
+    hdr = (f"{'arch':<24s}{'shape':<15s}{'t_comp':>9s}{'t_mem':>9s}"
+           f"{'t_coll':>9s} {'bound':<11s}{'useful':>7s}{'roofl%':>8s}"
+           f"{'GB/dev':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda x: -x.get("frac", 0)):
+        if r["status"] != "ok":
+            print(f"{r['arch']:<24s}{r['shape']:<15s} {r['status']}")
+            continue
+        print(f"{r['arch']:<24s}{r['shape']:<15s}"
+              f"{r['t_compute']:>9.3g}{r['t_memory']:>9.3g}"
+              f"{r['t_collective']:>9.3g} {r['bottleneck']:<11s}"
+              f"{r['useful']:>7.3f}{100*r['frac']:>7.2f}%"
+              f"{r['peak_gb']:>8.1f}")
+    n_ok = sum(1 for r in rows if r["status"] == "ok")
+    print(f"\n{n_ok}/{len(rows)} cells ok on mesh={mesh}")
+
+
+if __name__ == "__main__":
+    main()

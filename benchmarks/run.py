@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark) and
+writes detailed rows to results/bench/*.json. ``--full`` runs at paper
+scale (slow on this 1-core container); default is the reduced sweep.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bta_tpu, fig1_cf, fig2_multilabel, fig3_halted,
+                            table1_toy, table4_scaling)
+    mods = {
+        "table1_toy": table1_toy,
+        "fig1_cf": fig1_cf,
+        "fig2_multilabel": fig2_multilabel,
+        "fig3_halted": fig3_halted,
+        "table4_scaling": table4_scaling,
+        "bta_tpu": bta_tpu,
+    }
+    if args.only:
+        mods = {k: v for k, v in mods.items() if k in args.only.split(",")}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods.items():
+        try:
+            mod.main(quick=quick)
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

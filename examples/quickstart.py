@@ -1,0 +1,53 @@
+"""Quickstart: build a SEP-LR model, index it, and query exact top-K
+through every engine — the paper's core loop in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    blocked_topk,
+    build_index,
+    naive_topk,
+    random_model,
+    threshold_topk_from_index,
+)
+
+# 1) A trained SEP-LR model is just a catalogue of target factors t(y).
+#    (Any matrix-factorisation / multi-label / dyadic model reduces to this
+#    — see repro.core.seplr adapters.)
+rng = np.random.default_rng(0)
+model = random_model(rng, num_targets=50_000, rank=30,
+                     distribution="lowrank_spectrum")
+print(f"catalogue: M={model.num_targets} items, R={model.rank}")
+
+# 2) Build the sorted-list index once, offline (O(R M log M)).
+index = build_index(model.targets)
+
+# 3) Query. The naive baseline scores all M items...
+u = jnp.asarray(rng.standard_normal(model.rank).astype(np.float32)
+                * (1.0 / np.sqrt(1.0 + np.arange(model.rank))))
+naive = naive_topk(model.targets, u, k=10)
+print(f"naive     : top-1 score {float(naive.values[0]):.4f}, "
+      f"{int(naive.n_scored):>6d} scores computed")
+
+# ...the Threshold Algorithm proves the same top-10 after far fewer scores...
+ta = threshold_topk_from_index(model.targets, index, u, k=10)
+print(f"TA        : top-1 score {float(ta.values[0]):.4f}, "
+      f"{int(ta.n_scored):>6d} scores computed "
+      f"({int(ta.n_scored) / model.num_targets:.1%} of naive)")
+
+# ...and the Block Threshold Algorithm does it in MXU-shaped block work.
+bta = blocked_topk(model.targets, index.order_desc, index.t_sorted_desc,
+                   u, k=10, block_size=256)
+print(f"BTA(b=256): top-1 score {float(bta.values[0]):.4f}, "
+      f"{int(bta.n_scored):>6d} scores computed, "
+      f"{int(bta.depth) // 256} blocks")
+
+assert np.allclose(np.sort(np.asarray(naive.values)),
+                   np.sort(np.asarray(ta.values)), atol=1e-4)
+assert np.allclose(np.sort(np.asarray(naive.values)),
+                   np.sort(np.asarray(bta.values)), atol=1e-4)
+print("all three engines returned the identical exact top-10.")

@@ -1,0 +1,79 @@
+"""Two-stage recsys serving (DESIGN.md §3): train DeepFM on synthetic
+clicks, then serve retrieval through the EXACT SEP-LR top-K engine and
+re-rank the retrieved candidates with the full (non-separable) model.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import from_matrix_factorization
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import recsys_batches
+from repro.models import recsys as recsys_mod
+from repro.serving.server import TopKServer, TwoStageRanker
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+CFG = recsys_mod.RecsysConfig("deepfm-demo", "deepfm", n_dense=0,
+                              n_sparse=12, embed_dim=16,
+                              vocab_per_field=2000, mlp_dims=(64, 64))
+N_CANDIDATES = 20_000
+
+
+def main():
+    # 1) train the ranking model on synthetic click logs
+    params = recsys_mod.init_params(CFG, jax.random.PRNGKey(0))
+    opt = OptimizerConfig(kind="adamw", lr=3e-3, warmup_steps=10,
+                          total_steps=150)
+    data = PrefetchLoader(lambda: recsys_batches(
+        0, CFG.n_dense, CFG.n_sparse, CFG.vocab_per_field, 256))
+    tr = Trainer(lambda p, b: recsys_mod.loss_fn(p, b, CFG), params, opt,
+                 data, TrainerConfig(total_steps=150, log_every=25))
+    final = tr.run()
+    print(f"DeepFM trained: loss {tr.history[0]['loss']:.4f} -> "
+          f"{final['loss']:.4f} (acc {final['acc']:.2%})")
+
+    # 2) candidate catalogue = item-tower embeddings (SEP-LR by design)
+    rng = np.random.default_rng(1)
+    candidates = jnp.asarray(
+        rng.standard_normal((N_CANDIDATES, CFG.embed_dim)).astype(np.float32)
+        * (1.0 / np.sqrt(1.0 + rng.random(N_CANDIDATES)))[:, None])
+    retrieval = TopKServer(from_matrix_factorization(candidates, "items"),
+                           max_batch=16, block_size=256)
+
+    # 3) two-stage: exact top-100 retrieval -> full-model re-rank
+    def rerank(query_batch, cand_ids):
+        # full DeepFM forward on (query, candidate) pairs: inject the
+        # candidate id into the last sparse field
+        B, N = cand_ids.shape
+        scores = np.zeros((B, N), np.float32)
+        for b in range(B):
+            sp = np.repeat(query_batch["sparse"][b][None], N, axis=0).copy()
+            sp[:, -1] = cand_ids[b] % CFG.vocab_per_field
+            logits = recsys_mod.forward(
+                tr.params, {"dense": jnp.zeros((N, 0)),
+                            "sparse": jnp.asarray(sp)}, CFG)
+            scores[b] = np.asarray(logits)
+        return scores
+
+    ranker = TwoStageRanker(retrieval, rerank, retrieve_n=100)
+    queries = next(iter(PrefetchLoader(lambda: recsys_batches(
+        7, CFG.n_dense, CFG.n_sparse, CFG.vocab_per_field, 4))))
+    U = recsys_mod.query_tower(tr.params, {
+        "dense": jnp.asarray(queries["dense"]),
+        "sparse": jnp.asarray(queries["sparse"])}, CFG)
+    ids, scores = ranker.rank(queries, U, k=5, method="bta")
+    st = retrieval.stats["bta"]
+    print(f"retrieved top-100 of {N_CANDIDATES} exactly with "
+          f"{st.scores_per_query:.0f} scores/query "
+          f"({st.scores_per_query / N_CANDIDATES:.1%} of naive), "
+          f"then re-ranked to top-5:")
+    for b in range(4):
+        print(f"  query {b}: items {ids[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

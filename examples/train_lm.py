@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on synthetic data with the full substrate (AdamW, checkpointing,
+fault-tolerant trainer), then serve a few decode steps through the SEP-LR
+top-K head.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--tiny]
+
+``--tiny`` (CI mode) shrinks the model so the example finishes in ~1 min
+on this 1-core CPU container; the default ~100M config is the honest
+"train a real model" path and takes a few hours of CPU.
+"""
+
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import lm_batches
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = tf_mod.TransformerConfig(
+            name="lm-tiny", n_layers=2, d_model=128, n_heads=4,
+            n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=2048,
+            logit_chunk=64, kv_block=64)
+    else:
+        # ~100M params: 12L x 768d (GPT-2-small-ish), GQA 12/4
+        cfg = tf_mod.TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=32768,
+            logit_chunk=128, kv_block=128)
+    params = tf_mod.init_params(cfg, jax.random.PRNGKey(0))
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    ckpt_dir = args.ckpt_dir or os.path.join(tempfile.gettempdir(),
+                                             f"ckpt_{cfg.name}")
+    opt = OptimizerConfig(kind="adamw", lr=3e-3 if args.tiny else 6e-4,
+                          warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    data = PrefetchLoader(lambda: lm_batches(
+        0, cfg.vocab_size, args.batch, args.seq_len))
+    tr = Trainer(lambda p, b: tf_mod.loss_fn(p, b, cfg), params, opt, data,
+                 TrainerConfig(total_steps=args.steps, log_every=10,
+                               ckpt_every=max(args.steps // 4, 10),
+                               ckpt_dir=ckpt_dir))
+    final = tr.run()
+    print(f"trained {tr.step} steps; loss "
+          f"{tr.history[0]['loss']:.4f} -> {final['loss']:.4f}; "
+          f"checkpoints in {ckpt_dir}")
+
+    # --- decode through the exact top-K head (the paper's technique) -----
+    cache = tf_mod.init_kv_cache(cfg, 1, 32)
+    tok = jnp.asarray([[1]], jnp.int32)
+    for t in range(8):
+        (vals, idx), cache = tf_mod.serve_step(tr.params, cache, tok, t,
+                                               cfg, top_k=8)
+        tok = idx[:, :1]   # greedy decode from the exact top-K set
+    print("decoded 8 tokens via the SEP-LR top-K head; last top-8 ids:",
+          np.asarray(idx[0]))
+
+
+if __name__ == "__main__":
+    main()

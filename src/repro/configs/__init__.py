@@ -1,0 +1,43 @@
+"""Registry of the 10 assigned architectures (+ the paper's own configs)."""
+from repro.configs import (
+    dcn_v2,
+    deepfm,
+    deepseek_67b,
+    dlrm_rm2,
+    fm,
+    gemma_2b,
+    llama4_scout_17b_a16e,
+    olmoe_1b_7b,
+    pna,
+    stablelm_3b,
+)
+from repro.configs.base import ArchSpec, ShapeCell
+
+REGISTRY = {
+    spec.arch_id: spec
+    for spec in [
+        olmoe_1b_7b.SPEC,
+        llama4_scout_17b_a16e.SPEC,
+        deepseek_67b.SPEC,
+        gemma_2b.SPEC,
+        stablelm_3b.SPEC,
+        pna.SPEC,
+        deepfm.SPEC,
+        dcn_v2.SPEC,
+        dlrm_rm2.SPEC,
+        fm.SPEC,
+    ]
+}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def all_cells():
+    """Every (arch x shape) dry-run cell — 40 total."""
+    for arch_id, spec in REGISTRY.items():
+        for cell in spec.shapes:
+            yield arch_id, cell.name

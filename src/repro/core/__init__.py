@@ -1,0 +1,51 @@
+"""Core: exact top-K inference for SEP-LR models (the paper's contribution).
+
+Public API:
+  SepLRModel, build_index, TopKIndex
+  naive_topk                      — baseline (matmul + top_k)
+  threshold_topk / *_np           — the Threshold Algorithm (Alg. 2)
+  fagin_topk_np                   — Fagin's Algorithm (Alg. 1)
+  partial_threshold_topk_np       — Partial TA (Alg. 3)
+  blocked_topk (+batched)         — TPU-native Block Threshold Algorithm
+  norm_pruned_topk                — Cauchy-Schwarz norm screening (beyond paper)
+  sharded_naive_topk / sharded_blocked_topk / hierarchical_merge_topk
+"""
+
+from repro.core.blocked import blocked_topk, blocked_topk_batched, norm_pruned_topk
+from repro.core.fagin import FaginStats, fagin_topk_np
+from repro.core.index import TopKIndex, build_index
+from repro.core.naive import TopKResult, naive_topk
+from repro.core.partial import PartialTAStats, partial_threshold_topk_np
+from repro.core.seplr import (
+    SepLRModel,
+    from_cosine_similarity,
+    from_linear_multilabel,
+    from_matrix_factorization,
+    from_pairwise_kronecker,
+    kronecker_query,
+    normalize_query,
+    random_model,
+)
+from repro.core.sharded import (
+    hierarchical_merge_topk,
+    sharded_blocked_topk,
+    sharded_naive_topk,
+)
+from repro.core.threshold import (
+    TAStats,
+    threshold_topk,
+    threshold_topk_from_index,
+    threshold_topk_np,
+)
+
+__all__ = [
+    "SepLRModel", "TopKIndex", "TopKResult", "TAStats", "FaginStats",
+    "PartialTAStats", "build_index", "naive_topk", "threshold_topk",
+    "threshold_topk_from_index", "threshold_topk_np", "fagin_topk_np",
+    "partial_threshold_topk_np", "blocked_topk", "blocked_topk_batched",
+    "norm_pruned_topk", "sharded_naive_topk", "sharded_blocked_topk",
+    "hierarchical_merge_topk", "from_cosine_similarity",
+    "from_matrix_factorization", "from_linear_multilabel",
+    "from_pairwise_kronecker", "kronecker_query", "normalize_query",
+    "random_model",
+]

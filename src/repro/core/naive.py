@@ -1,0 +1,36 @@
+"""Naive exact top-K: score every target, keep the best K.
+
+The paper's baseline (``O((R + log K) M)``). On TPU this is a single
+MXU matmul followed by ``lax.top_k`` — the strongest possible wall-clock
+baseline, which is why EXPERIMENTS.md reports both score counts (the paper's
+metric) and roofline terms (the hardware metric).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+class TopKResult(NamedTuple):
+    values: Array   # [K] (or [B, K]) scores, descending
+    indices: Array  # [K] (or [B, K]) item ids
+    n_scored: Array  # scalar (or [B]) int32 — number of s(x,y) evaluations
+    depth: Array     # scalar (or [B]) int32 — list depth reached (0 for naive)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def naive_topk(targets: Array, u: Array, k: int) -> TopKResult:
+    """Exact top-K by full scoring. ``targets: [M, R]``, ``u: [R] or [B, R]``."""
+    scores = jnp.einsum("...r,mr->...m", u, targets)
+    values, indices = jax.lax.top_k(scores, k)
+    m = targets.shape[0]
+    batch_shape = scores.shape[:-1]
+    n_scored = jnp.full(batch_shape, m, dtype=jnp.int32)
+    depth = jnp.zeros(batch_shape, dtype=jnp.int32)
+    return TopKResult(values, indices, n_scored, depth)

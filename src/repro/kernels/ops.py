@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``topk_mips`` handles the catalogue preparation (norm ordering, padding,
+per-block Cauchy-Schwarz bounds) and maps kernel-local indices back to
+catalogue ids; kernels themselves stay shape-strict.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.embedding_bag import embedding_bag_pallas
+from repro.kernels.fm_interaction import fm_interaction_pallas
+from repro.kernels.topk_mips import topk_mips_pallas
+
+Array = jnp.ndarray
+
+
+class MIPSCatalog:
+    """Norm-ordered, block-padded catalogue for the topk_mips kernel."""
+
+    def __init__(self, T, block_m: int = 256):
+        T = np.asarray(T, np.float32)
+        M, R = T.shape
+        norms = np.linalg.norm(T, axis=1)
+        order = np.argsort(-norms, kind="stable")
+        M_pad = -(-M // block_m) * block_m
+        T_sorted = np.zeros((M_pad, R), np.float32)
+        T_sorted[:M] = T[order]
+        self.block_m = block_m
+        self.num_real = M
+        self.order = jnp.asarray(order.astype(np.int32))
+        self.T_sorted = jnp.asarray(T_sorted)
+        # max norm per block = norm of its first row (sorted order)
+        self.block_max_norm = jnp.asarray(
+            np.pad(norms[order], (0, M_pad - M))[::block_m].copy())
+
+    def query(self, u: Array, k: int, interpret: bool = True):
+        """Exact top-K. Returns (values, catalogue ids, stats)."""
+        u = jnp.asarray(u, jnp.float32)
+        bounds = jnp.linalg.norm(u) * self.block_max_norm
+        vals, local_idx, stats = topk_mips_pallas(
+            self.T_sorted, bounds, u, k, self.block_m, interpret=interpret)
+        ids = jnp.where(local_idx >= 0,
+                        self.order[jnp.clip(local_idx, 0, self.num_real - 1)],
+                        -1)
+        return vals, ids, stats
+
+
+def embedding_bag(table: Array, ids: Array, mode: str = "sum",
+                  block_b: int = 8, interpret: bool = True) -> Array:
+    """Fused EmbeddingBag. table: [V, d]; ids: [B, F] -> [B, d]."""
+    B = ids.shape[0]
+    pad = (-B) % block_b
+    if pad:
+        ids = jnp.pad(ids, ((0, pad), (0, 0)))
+    out = embedding_bag_pallas(table, ids, mode, block_b, interpret)
+    return out[:B]
+
+
+def fm_interaction(emb: Array, block_b: int = 64,
+                   interpret: bool = True) -> Array:
+    """Fused FM sum-square interaction. emb: [B, F, d] -> [B]."""
+    B = emb.shape[0]
+    pad = (-B) % block_b
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0), (0, 0)))
+    out = fm_interaction_pallas(emb, block_b, interpret)
+    return out[:B]

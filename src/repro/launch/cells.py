@@ -1,0 +1,384 @@
+"""Dry-run cell builders: (architecture x input shape x mesh) -> lowerable.
+
+Each builder returns a ``Cell``:
+  fn            — the step callable (train_step / prefill / serve_step /
+                  retrieval),
+  args          — ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+                  NO device allocation),
+  in_shardings  — NamedSharding pytree matching args,
+  model_flops   — the analytic "useful" FLOPs for §Roofline
+                  (6·N_active·D train / 2·N_active·D forward, + attention).
+
+Builders must run under ``jax.set_mesh(mesh)`` so the divisibility-aware
+sharding rules resolve against the actual mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeCell
+from repro.core.sharded import sharded_naive_topk
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tf_mod
+from repro.models.common import MeshRules
+from repro.train.optimizer import OptimizerConfig, apply_updates, init_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    model_flops: float
+    meta: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    return dict(mesh.shape)
+
+
+def _dp_axes(mesh) -> Tuple[str, ...]:
+    sizes = _mesh_sizes(mesh)
+    return tuple(a for a in ("pod", "data") if a in sizes)
+
+
+def _dp_size(mesh) -> int:
+    sizes = _mesh_sizes(mesh)
+    out = 1
+    for a in _dp_axes(mesh):
+        out *= sizes[a]
+    return out
+
+
+def _batch_spec(mesh, batch: int) -> P:
+    dp = _dp_axes(mesh)
+    return P(dp) if dp and batch % _dp_size(mesh) == 0 else P(None)
+
+
+def _ns(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _sds_like(tree):
+    return jax.tree_util.tree_map(
+        lambda x: SDS(x.shape, x.dtype), tree)
+
+
+OPT_CFG = OptimizerConfig(kind="adamw", lr=3e-4, total_steps=100_000,
+                          warmup_steps=2000)
+
+
+def _train_step(loss_fn):
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_p, new_s, om = apply_updates(OPT_CFG, params, grads, opt_state)
+        return new_p, new_s, {"loss": loss, **metrics, **om}
+    return step
+
+
+def _params_and_opt_sds(init_fn):
+    params = jax.eval_shape(init_fn)
+    opt = jax.eval_shape(lambda p: init_state(OPT_CFG, p), params)
+    return params, opt
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_attn_flops(cfg, batch: int, seq: int, factor: float) -> float:
+    # qk^T + pv per layer: 2 * 2 * B * H * S^2/2 (causal) * hd
+    per_layer = 2.0 * batch * cfg.n_heads * seq * seq * cfg.head_dim
+    return factor * cfg.n_layers * per_layer
+
+
+def _build_lm(arch_id: str, cell: ShapeCell, mesh, rules: MeshRules,
+              override: Optional[Dict] = None) -> Cell:
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    if override:
+        cfg = dataclasses.replace(cfg, **override)
+    dims = cell.dims
+    B, S = dims["global_batch"], dims["seq_len"]
+    p_sds, opt_sds = _params_and_opt_sds(
+        lambda: tf_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    if cell.kind in ("lm_prefill", "lm_decode"):
+        # §Perf-B iter 2: serving weights are stored bf16 (halves the
+        # per-token weight-read memory term and the argument footprint)
+        p_sds = jax.tree_util.tree_map(
+            lambda x: SDS(x.shape, jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, p_sds)
+
+    if cell.kind == "lm_train":
+        pspec = tf_mod.param_specs(cfg, rules, "train")
+        opt_spec = type(opt_sds)(P(), pspec, pspec)
+        batch_sds = {"tokens": SDS((B, S), jnp.int32),
+                     "labels": SDS((B, S), jnp.int32)}
+        bspec = {"tokens": P(_dp_axes(mesh), None),
+                 "labels": P(_dp_axes(mesh), None)}
+        fn = _train_step(lambda p, b: tf_mod.loss_fn(p, b, cfg, rules))
+        args = (p_sds, opt_sds, batch_sds)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, bspec))
+        out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), None)
+        flops = 6.0 * cfg.active_param_count() * B * S \
+            + 3.0 * _lm_attn_flops(cfg, B, S, 0.5)
+    elif cell.kind == "lm_prefill":
+        pspec = tf_mod.param_specs(cfg, rules, "serve")
+        batch_sds = SDS((B, S), jnp.int32)
+        fn = functools.partial(tf_mod.prefill, config=cfg, rules=rules)
+        args = (p_sds, batch_sds)
+        in_sh = (_ns(mesh, pspec),
+                 NamedSharding(mesh, P(_dp_axes(mesh) if B % _dp_size(mesh) == 0 else None, None)))
+        out_sh = None
+        flops = 2.0 * cfg.active_param_count() * B * S \
+            + _lm_attn_flops(cfg, B, S, 0.5)
+    elif cell.kind == "lm_decode":
+        pspec = tf_mod.param_specs(cfg, rules, "serve")
+        cache_sds = jax.eval_shape(
+            lambda: tf_mod.init_kv_cache(cfg, B, S))
+        cache_spec = tf_mod.kv_cache_specs(cfg, rules, B, S)
+        tok_spec = P(_dp_axes(mesh) if B % _dp_size(mesh) == 0 else None, None)
+        tok_sds = SDS((B, 1), jnp.int32)
+        clen_sds = SDS((), jnp.int32)
+
+        def fn(params, cache, tokens, cache_len):
+            return tf_mod.serve_step(params, cache, tokens, cache_len, cfg,
+                                     rules, top_k=8)
+
+        args = (p_sds, cache_sds, tok_sds, clen_sds)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, cache_spec),
+                 NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()))
+        out_sh = None
+        # one token per sequence + attention over the cache
+        flops = 2.0 * cfg.active_param_count() * B \
+            + 4.0 * cfg.n_layers * B * cfg.n_heads * S * cfg.head_dim
+    else:
+        raise ValueError(cell.kind)
+    return Cell(arch_id, cell.name, cell.kind, fn, args, in_sh, out_sh,
+                flops, {"config": cfg.name, "params": cfg.param_count(),
+                        "active_params": cfg.active_param_count(),
+                        "batch": B, "seq": S})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def _build_gnn(arch_id: str, cell: ShapeCell, mesh, rules: MeshRules) -> Cell:
+    spec = get_arch(arch_id)
+    dims = cell.dims
+    task = dims.get("task", "node")
+    cfg = spec.make_config(d_feat=dims["d_feat"],
+                           n_classes=dims["n_classes"], task=task)
+    dp = _dp_axes(mesh)
+    dp_size = _dp_size(mesh)
+
+    if cell.name == "minibatch_lg":
+        N = _pad_to(dims["pad_nodes"], 512)
+        E = _pad_to(dims["pad_edges"], 512)
+    elif cell.name == "molecule":
+        N = dims["batch"] * dims["n_nodes"]
+        E = _pad_to(dims["batch"] * dims["n_edges"], 512)
+    else:
+        N = dims["n_nodes"]
+        E = _pad_to(dims["n_edges"], 512)
+
+    graph_sds = {
+        "nodes": SDS((N, dims["d_feat"]), jnp.float32),
+        "edge_src": SDS((E,), jnp.int32),
+        "edge_dst": SDS((E,), jnp.int32),
+        "edge_mask": SDS((E,), jnp.bool_),
+        "node_mask": SDS((N,), jnp.bool_),
+        "labels": SDS((dims["batch"],) if task == "graph" else (N,), jnp.int32),
+    }
+    espec = P(dp) if E % dp_size == 0 else P(None)
+    gspec = {
+        "nodes": P(None, None),
+        "edge_src": espec, "edge_dst": espec, "edge_mask": espec,
+        "node_mask": P(None), "labels": P(None),
+    }
+    if task == "graph":
+        graph_sds["graph_ids"] = SDS((N,), jnp.int32)
+        graph_sds["n_graphs"] = dims["batch"]
+        gspec["graph_ids"] = P(None)
+        gspec["n_graphs"] = None
+
+    p_sds, opt_sds = _params_and_opt_sds(
+        lambda: gnn_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = gnn_mod.param_specs(cfg, rules)
+    opt_spec = type(opt_sds)(P(), pspec, pspec)
+
+    static_ng = graph_sds.pop("n_graphs", None)
+    gspec.pop("n_graphs", None)
+
+    def loss(p, g):
+        if static_ng is not None:
+            g = dict(g, n_graphs=static_ng)
+        return gnn_mod.loss_fn(p, g, cfg, rules)
+
+    fn = _train_step(loss)
+    args = (p_sds, opt_sds, graph_sds)
+    in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, gspec))
+    out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), None)
+    d = cfg.d_hidden
+    flops = 3.0 * cfg.n_layers * (2.0 * E * (2 * d) * d + 2.0 * N * (12 * d) * d) \
+        + 6.0 * N * dims["d_feat"] * d
+    return Cell(arch_id, cell.name, cell.kind, fn, args, in_sh, out_sh,
+                flops, {"config": cfg.name, "params": cfg.param_count(),
+                        "nodes": N, "edges": E})
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch(cfg, B: int, mesh):
+    sds = {
+        "dense": SDS((B, cfg.n_dense), jnp.float32),
+        "sparse": SDS((B, cfg.n_sparse), jnp.int32),
+        "label": SDS((B,), jnp.float32),
+    }
+    bspec = _batch_spec(mesh, B)
+    spec = {"dense": P(*bspec, None), "sparse": P(*bspec, None),
+            "label": bspec}
+    return sds, spec
+
+
+def _recsys_mlp_flops(cfg) -> float:
+    """per-example forward MACs x2 in the dense towers + interaction."""
+    fl = 0.0
+    if cfg.arch == "deepfm":
+        dims = (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+        fl += sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        fl += 4.0 * cfg.n_sparse * cfg.embed_dim
+    if cfg.arch == "fm":
+        fl += 4.0 * cfg.n_sparse * cfg.embed_dim
+    if cfg.arch == "dcn_v2":
+        d0 = cfg.interaction_input
+        fl += cfg.n_cross_layers * 2.0 * d0 * d0
+        dims = (d0,) + cfg.mlp_dims + (1,)
+        fl += sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    if cfg.arch == "dlrm":
+        dims = (cfg.n_dense,) + cfg.bot_mlp
+        fl += sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+        n = cfg.n_sparse + 1
+        fl += 2.0 * n * n * cfg.embed_dim
+        dims = (cfg.interaction_input,) + cfg.top_mlp
+        fl += sum(2.0 * dims[i] * dims[i + 1] for i in range(len(dims) - 1))
+    return fl
+
+
+def _build_recsys(arch_id: str, cell: ShapeCell, mesh, rules: MeshRules) -> Cell:
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    dims = cell.dims
+    p_sds, opt_sds = _params_and_opt_sds(
+        lambda: recsys_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = recsys_mod.param_specs(cfg, rules)
+
+    if cell.kind == "recsys_train":
+        B = dims["batch"]
+        batch_sds, bspec = _recsys_batch(cfg, B, mesh)
+        opt_spec = type(opt_sds)(P(), pspec, pspec)
+        fn = _train_step(lambda p, b: recsys_mod.loss_fn(p, b, cfg, rules))
+        args = (p_sds, opt_sds, batch_sds)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), _ns(mesh, bspec))
+        out_sh = (_ns(mesh, pspec), _ns(mesh, opt_spec), None)
+        flops = 3.0 * B * _recsys_mlp_flops(cfg)
+    elif cell.kind == "recsys_serve":
+        B = dims["batch"]
+        batch_sds, bspec = _recsys_batch(cfg, B, mesh)
+        fn = functools.partial(recsys_mod.forward, config=cfg, rules=rules)
+
+        def fn(p, b, _cfg=cfg, _r=rules):
+            return recsys_mod.forward(p, b, _cfg, _r)
+
+        args = (p_sds, batch_sds)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, bspec))
+        out_sh = None
+        flops = 1.0 * B * _recsys_mlp_flops(cfg)
+    elif cell.kind == "recsys_retrieval":
+        B = dims["batch"]
+        M = _pad_to(dims["n_candidates"], 1 << 14)   # even sharding at 512
+        axes = tuple(a for a in ("data", "model") if a in _mesh_sizes(mesh))
+        topk_fn = sharded_naive_topk(mesh, P(axes, None), axes)
+        batch_sds, bspec = _recsys_batch(cfg, B, mesh)
+        batch_sds.pop("label"); bspec.pop("label")
+        # §Perf-C: candidate catalogue served in bf16 (halves the scan read;
+        # scores accumulate f32 inside the merge)
+        cand_sds = SDS((M, cfg.embed_dim), jnp.bfloat16)
+
+        def fn(params, batch, candidates, _cfg=cfg, _r=rules):
+            u = recsys_mod.query_tower(params, batch, _cfg, _r)
+            return topk_fn(candidates, u, 100)
+
+        args = (p_sds, batch_sds, cand_sds)
+        in_sh = (_ns(mesh, pspec), _ns(mesh, bspec),
+                 NamedSharding(mesh, P(axes, None)))
+        out_sh = None
+        flops = 2.0 * B * M * cfg.embed_dim
+    else:
+        raise ValueError(cell.kind)
+    return Cell(arch_id, cell.name, cell.kind, fn, args, in_sh, out_sh,
+                flops, {"config": cfg.name, "params": cfg.param_count(),
+                        "batch": dims.get("batch")})
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh,
+               rules: Optional[MeshRules] = None,
+               override: Optional[Dict] = None) -> Cell:
+    """Must be called under ``jax.set_mesh(mesh)``.
+
+    ``override`` (LM only): dataclasses.replace kwargs on the config —
+    used by the dry-run's roofline calibration compiles (n_layers 1/2,
+    unroll=True) to de-bias XLA's while-body-counted-once cost analysis.
+    """
+    rules = rules or MeshRules()
+    spec = get_arch(arch_id)
+    cell = spec.shape(shape_name)
+    if spec.family == "lm":
+        return _build_lm(arch_id, cell, mesh, rules, override)
+    if spec.family == "gnn":
+        return _build_gnn(arch_id, cell, mesh, rules)
+    if spec.family == "recsys":
+        return _build_recsys(arch_id, cell, mesh, rules)
+    raise ValueError(spec.family)
+
+
+def lm_family(arch_id: str) -> bool:
+    return get_arch(arch_id).family == "lm" 

@@ -1,0 +1,35 @@
+"""Production meshes. FUNCTIONS, never module-level constants — importing
+this module must not touch jax device state (dryrun.py sets the fake device
+count before any jax initialisation)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """Scaled-down mesh for in-repo integration tests (8 fake devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+MESHES = {
+    "single": lambda: make_production_mesh(multi_pod=False),
+    "multi": lambda: make_production_mesh(multi_pod=True),
+    "tiny": lambda: make_tiny_mesh(multi_pod=False),
+    "tiny-multi": lambda: make_tiny_mesh(multi_pod=True),
+}

@@ -1,0 +1,80 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the arch's REDUCED (smoke) config end to
+end with the full substrate — synthetic data pipeline, AdamW, fault-
+tolerant checkpointing, resume. On a real pod the same entry point takes
+``--full --mesh single|multi`` and pjit-shards the step exactly like the
+dry-run cells (launch/cells.py is the shared source of shardings).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import lm_batches, molecule_batch, random_graph, recsys_batches
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as tf_mod
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def build(arch_id: str, batch: int, seq_len: int, seed: int):
+    spec = get_arch(arch_id)
+    cfg = spec.make_smoke_config()
+    key = jax.random.PRNGKey(seed)
+    if spec.family == "lm":
+        params = tf_mod.init_params(cfg, key)
+        loss = lambda p, b: tf_mod.loss_fn(p, b, cfg)  # noqa: E731
+        data = lambda: lm_batches(seed, cfg.vocab_size, batch, seq_len)  # noqa: E731
+    elif spec.family == "recsys":
+        params = recsys_mod.init_params(cfg, key)
+        loss = lambda p, b: recsys_mod.loss_fn(p, b, cfg)  # noqa: E731
+        data = lambda: recsys_batches(  # noqa: E731
+            seed, cfg.n_dense, cfg.n_sparse, cfg.vocab_per_field, batch)
+    elif spec.family == "gnn":
+        params = gnn_mod.init_params(cfg, key)
+        loss = lambda p, b: gnn_mod.loss_fn(p, b, cfg)  # noqa: E731
+        rng = np.random.default_rng(seed)
+
+        def data():
+            while True:
+                yield random_graph(rng, 256, 1024, cfg.d_in, cfg.n_classes)
+    else:
+        raise ValueError(spec.family)
+    return cfg, params, loss, data
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, params, loss, data = build(args.arch, args.batch, args.seq_len,
+                                    args.seed)
+    opt = OptimizerConfig(kind="adamw", lr=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    tr = Trainer(loss, params, opt, PrefetchLoader(data),
+                 TrainerConfig(total_steps=args.steps, log_every=10,
+                               ckpt_every=args.ckpt_every,
+                               ckpt_dir=args.ckpt_dir))
+    final = tr.run()
+    first = tr.history[0]["loss"] if tr.history else float("nan")
+    print(f"arch={args.arch} config={cfg.name} steps={tr.step} "
+          f"loss {first:.4f} -> {final.get('loss', float('nan')):.4f}")
+
+
+if __name__ == "__main__":
+    main()

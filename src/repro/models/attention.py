@@ -1,0 +1,170 @@
+"""Attention: RoPE + GQA/MQA, memory-bounded blocked softmax, decode path.
+
+Training/prefill uses a flash-attention-style online-softmax scan over KV
+blocks so the [S, S] score matrix is never materialised (the pure-JAX
+analogue of the IO-aware kernel; the Pallas decode kernel lives in
+``repro.kernels``). Decode attends one query token against a long KV cache —
+linear in context length, which is why the long_500k cells run as decode
+(DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., S, D/2]
+    sin = jnp.sin(angles)[..., None, :]                          # [..., S, 1, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention for training / prefill
+# ---------------------------------------------------------------------------
+
+
+def _expand_kv(k: Array, n_q_heads: int) -> Array:
+    """GQA: repeat KV heads to match query heads. k: [B, S, Hkv, D]."""
+    n_kv = k.shape[2]
+    if n_kv == n_q_heads:
+        return k
+    return jnp.repeat(k, n_q_heads // n_kv, axis=2)
+
+
+def blocked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    causal: bool = True,
+    kv_block: int = 512,
+    q_positions: Optional[Array] = None,
+    kv_positions: Optional[Array] = None,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> Array:
+    """Online-softmax attention. q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D].
+
+    Scans over KV blocks carrying (acc, running max, running sum); peak
+    intermediate is [B, H, Sq, kv_block] instead of [B, H, Sq, Skv].
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)
+
+    n_blocks = -(-Skv // kv_block)
+    pad = n_blocks * kv_block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+
+    qt = (q * scale).transpose(0, 2, 1, 3)                    # [B, H, Sq, D]
+    kt = k.transpose(0, 2, 1, 3).reshape(B, H, n_blocks, kv_block, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B, H, n_blocks, kv_block, D)
+    kv_pos_blocks = kv_positions.reshape(n_blocks, kv_block)
+
+    def step(carry, blk):
+        acc, m, l = carry
+        kb, vb, posb = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qt, kb)             # [B,H,Sq,blk]
+        mask = posb[None, None, None, :] >= 0
+        if causal:
+            mask = jnp.logical_and(
+                mask, posb[None, None, None, :] <= q_positions[None, None, :, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vb.dtype), vb)
+        acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    # fp32 accumulator (flash-attention numerics)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    blocks = (kt.transpose(2, 0, 1, 3, 4), vt.transpose(2, 0, 1, 3, 4),
+              kv_pos_blocks)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), blocks,
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)          # [B, Sq, H, D]
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cache_len: Optional[Array] = None,
+    scale: Optional[float] = None,
+    seq_shard: Optional[object] = None,
+) -> Array:
+    """q: [B, 1, H, D]; caches: [B, S, Hkv, D]. Linear in S.
+
+    Flash-decoding layout (§Perf-B): GQA is computed as a GROUPED einsum
+    (q reshaped [B, Hkv, G, D]) so the KV heads are never repeated, and
+    the score tensor is explicitly constrained to stay sequence-sharded —
+    without the constraint GSPMD chose to all-gather the whole KV cache
+    (2 x 2.1 GB f32 PER LAYER on deepseek long_500k). The softmax max/sum
+    over the sharded seq axis lower to tiny [B, Hkv, G] psums.
+
+    ``seq_shard``: optional callable mapping the score tensor to its
+    sharding-constrained version (models.common.shard partial).
+    """
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    q5 = (q * scale).reshape(B, Hkv, G, D)
+    # grouped scores, f32 accumulation without materialising f32 inputs
+    s = jnp.einsum("bkgd,bskd->bkgs", q5, k_cache,
+                   preferred_element_type=jnp.float32)
+    if seq_shard is not None:
+        s = seq_shard(s)
+    if cache_len is not None:
+        mask = jnp.arange(S)[None, None, None, :] < cache_len[:, None, None, None]
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)            # psum-max over shards
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out / l[..., 0][..., None]
+    return out.reshape(B, 1, H, D).astype(q.dtype)

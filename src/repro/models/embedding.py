@@ -1,0 +1,68 @@
+"""Embedding tables for recsys: lookup + EmbeddingBag, row-shardable.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — per the brief this
+layer IS part of the system: multi-hot bags are implemented as
+``jnp.take`` + ``jax.ops.segment_sum`` (taxonomy §B.6 / §B.11). Tables are
+row-sharded over the "tp" mesh axis (classic DLRM row-wise model
+parallelism); the gather across shards lowers to the expected all-to-all
+style collectives under pjit.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def embedding_lookup(table: Array, ids: Array) -> Array:
+    """One-hot field lookup. table: [V, d]; ids: [...] -> [..., d]."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(
+    table: Array,
+    flat_ids: Array,
+    segment_ids: Array,
+    num_segments: int,
+    mode: str = "sum",
+    weights: Optional[Array] = None,
+) -> Array:
+    """Multi-hot bag reduce: gather rows then segment-reduce per bag.
+
+    Args:
+      table: ``[V, d]``.
+      flat_ids: ``[N]`` row indices (ragged bags flattened).
+      segment_ids: ``[N]`` bag index per entry (sorted not required).
+      num_segments: number of bags (static).
+      mode: ``sum`` | ``mean`` | ``max``.
+      weights: optional ``[N]`` per-entry weights (sum/mean only).
+    """
+    rows = jnp.take(table, flat_ids, axis=0)                   # [N, d]
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+        c = jax.ops.segment_sum(jnp.ones_like(flat_ids, rows.dtype),
+                                segment_ids, num_segments=num_segments)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_segments)
+    raise ValueError(f"unknown mode {mode}")
+
+
+def hashed_lookup(table: Array, raw_ids: Array, num_hashes: int = 2) -> Array:
+    """Hash-trick lookup for unbounded vocabularies (QR-style compromise):
+    sum of ``num_hashes`` universal-hash probes into one physical table."""
+    V = table.shape[0]
+    out = 0
+    for i in range(num_hashes):
+        # Knuth multiplicative hashing with distinct odd constants
+        h = (raw_ids.astype(jnp.uint32) * jnp.uint32(2654435761 + 2 * i + 1)) % V
+        out = out + jnp.take(table, h.astype(jnp.int32), axis=0)
+    return out / num_hashes

@@ -1,0 +1,251 @@
+"""PNA — Principal Neighbourhood Aggregation (assigned GNN arch).
+
+Message passing via ``jax.ops.segment_sum`` / ``segment_max`` over an
+edge-index scatter (JAX is BCOO-only; per the brief the segment-op
+formulation IS the system). PNA combines 4 aggregators (mean, max, min,
+std) x 3 degree scalers (identity, amplification, attenuation)
+[arXiv:2004.05718].
+
+Graph batch layout (static shapes, padded):
+  nodes:    [N, F] float
+  edge_src: [E] int32     (messages flow src -> dst)
+  edge_dst: [E] int32
+  edge_mask:[E] bool      (padding)
+  node_mask:[N] bool
+  labels:   [N] int32 (node classification) or [G] (graph tasks)
+  graph_ids:[N] int32     (for batched small graphs / readout)
+
+Sharding: edges over "dp" (the only axis with enough parallelism for
+message passing), node states replicated per device — segment-sums over a
+sharded edge axis lower to psum. The paper's top-K technique does not
+apply to the message-passing forward (DESIGN.md §Arch-applicability);
+the optional link-prediction head ``link_scores`` is SEP-LR and routes
+through repro.core.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import MeshRules, dense_init, shard
+
+Array = jnp.ndarray
+
+AGGREGATORS = ("mean", "max", "min", "std")
+SCALERS = ("identity", "amplification", "attenuation")
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 1433
+    n_classes: int = 7
+    delta: float = 2.5          # mean log-degree of the training graphs
+    task: str = "node"          # node | graph
+    compute_dtype: object = jnp.float32
+
+    def param_count(self) -> int:
+        d = self.d_hidden
+        c = self.d_in * d + d                      # encoder
+        per_layer = (2 * d) * d + d                # message MLP
+        per_layer += (len(AGGREGATORS) * len(SCALERS) * d) * d + d  # update
+        c += self.n_layers * per_layer
+        c += d * self.n_classes + self.n_classes   # decoder
+        return c
+
+
+def init_params(config: PNAConfig, key) -> Dict:
+    keys = jax.random.split(key, 4)
+    d = config.d_hidden
+    L = config.n_layers
+    n_cat = len(AGGREGATORS) * len(SCALERS) * d
+    return {
+        "enc_w": dense_init(keys[0], (config.d_in, d)),
+        "enc_b": jnp.zeros((d,), jnp.float32),
+        "layers": {
+            "msg_w": dense_init(keys[1], (L, 2 * d, d)),
+            "msg_b": jnp.zeros((L, d), jnp.float32),
+            "upd_w": dense_init(keys[2], (L, n_cat, d)),
+            "upd_b": jnp.zeros((L, d), jnp.float32),
+        },
+        "dec_w": dense_init(keys[3], (d, config.n_classes)),
+        "dec_b": jnp.zeros((config.n_classes,), jnp.float32),
+    }
+
+
+def param_specs(config: PNAConfig, rules: MeshRules, mode: str = "train"):
+    from jax.sharding import PartitionSpec as P
+    rep2, rep1 = P(None, None), P(None)
+    return {
+        "enc_w": rep2, "enc_b": rep1,
+        "layers": {"msg_w": P(None, None, None), "msg_b": rep2,
+                   "upd_w": P(None, None, None), "upd_b": rep2},
+        "dec_w": rep2, "dec_b": rep1,
+    }
+
+
+def _pna_aggregate(messages: Array, edge_dst: Array, edge_mask: Array,
+                   num_nodes: int, degrees: Array, delta: float) -> Array:
+    """messages: [E, d] -> [N, 12d] (4 aggregators x 3 scalers)."""
+    w = edge_mask.astype(messages.dtype)[:, None]
+    m = messages * w
+    seg_sum = jax.ops.segment_sum(m, edge_dst, num_segments=num_nodes)
+    count = jnp.maximum(degrees, 1.0)[:, None].astype(messages.dtype)
+    mean = seg_sum / count
+    big_neg = jnp.asarray(-1e30, messages.dtype)
+    mx = jax.ops.segment_max(jnp.where(edge_mask[:, None], messages, big_neg),
+                             edge_dst, num_segments=num_nodes)
+    mx = jnp.where(mx <= big_neg / 2, 0.0, mx)
+    mn = -jax.ops.segment_max(jnp.where(edge_mask[:, None], -messages, big_neg),
+                              edge_dst, num_segments=num_nodes)
+    mn = jnp.where(mn >= -big_neg / 2, 0.0, mn)
+    sq = jax.ops.segment_sum(m * m, edge_dst, num_segments=num_nodes)
+    var = jnp.maximum(sq / count - mean * mean, 0.0)
+    std = jnp.sqrt(var + 1e-5)
+    agg = jnp.concatenate([mean, mx, mn, std], axis=-1)          # [N, 4d]
+    logd = jnp.log1p(degrees)[:, None].astype(messages.dtype)
+    amp = logd / delta
+    att = delta / jnp.maximum(logd, 1e-5)
+    return jnp.concatenate([agg, agg * amp, agg * att], axis=-1)  # [N, 12d]
+
+
+def forward(params: Dict, graph: Dict, config: PNAConfig,
+            rules: MeshRules = MeshRules()) -> Array:
+    """Returns node logits [N, n_classes] (or graph logits for task=graph)."""
+    dt = config.compute_dtype
+    h = graph["nodes"].astype(dt) @ params["enc_w"].astype(dt) + params["enc_b"].astype(dt)
+    src = graph["edge_src"]
+    dst = graph["edge_dst"]
+    emask = graph["edge_mask"]
+    N = h.shape[0]
+    degrees = jax.ops.segment_sum(emask.astype(jnp.float32), dst,
+                                  num_segments=N)
+
+    def body(h, lp):
+        hs = jnp.take(h, src, axis=0)
+        hd = jnp.take(h, dst, axis=0)
+        msg_in = jnp.concatenate([hs, hd], axis=-1)
+        msg_in = shard(msg_in, rules, "dp", None)
+        m = jax.nn.relu(msg_in @ lp["msg_w"].astype(dt) + lp["msg_b"].astype(dt))
+        agg = _pna_aggregate(m, dst, emask, N, degrees, config.delta)
+        upd = agg @ lp["upd_w"].astype(dt) + lp["upd_b"].astype(dt)
+        return h + jax.nn.relu(upd), None        # residual
+
+    # few layers -> always unroll so dry-run cost_analysis is exact
+    h, _ = jax.lax.scan(body, h, params["layers"], unroll=True)
+    if config.task == "graph":
+        gids = graph["graph_ids"]
+        G = int(graph["n_graphs"]) if "n_graphs" in graph else int(jnp.max(gids)) + 1
+        pooled = jax.ops.segment_sum(
+            h * graph["node_mask"][:, None].astype(dt), gids, num_segments=G)
+        return pooled @ params["dec_w"].astype(dt) + params["dec_b"].astype(dt)
+    return h @ params["dec_w"].astype(dt) + params["dec_b"].astype(dt)
+
+
+def loss_fn(params: Dict, graph: Dict, config: PNAConfig,
+            rules: MeshRules = MeshRules()) -> Tuple[Array, Dict]:
+    logits = forward(params, graph, config, rules).astype(jnp.float32)
+    labels = graph["labels"]
+    if config.task == "graph":
+        mask = jnp.ones(labels.shape, jnp.float32)
+    else:
+        mask = graph["node_mask"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    xent = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum((pred == labels) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return xent, {"xent": xent, "acc": acc}
+
+
+def link_scores(params: Dict, h: Array, query_nodes: Array) -> Array:
+    """SEP-LR link-prediction head: u = h[q], T = h — exact top-K neighbour
+    retrieval goes through repro.core (DESIGN.md §Arch-applicability)."""
+    return jnp.take(h, query_nodes, axis=0) @ h.T
+
+
+# ---------------------------------------------------------------------------
+# Neighbour sampler (host-side, numpy) — minibatch_lg cells
+# ---------------------------------------------------------------------------
+
+
+class NeighborSampler:
+    """Uniform fanout sampler over a CSR adjacency (GraphSAGE-style)."""
+
+    def __init__(self, edge_src: np.ndarray, edge_dst: np.ndarray,
+                 num_nodes: int, seed: int = 0):
+        order = np.argsort(edge_dst, kind="stable")
+        self.src_sorted = edge_src[order].astype(np.int32)
+        self.indptr = np.zeros(num_nodes + 1, np.int64)
+        counts = np.bincount(edge_dst, minlength=num_nodes)
+        self.indptr[1:] = np.cumsum(counts)
+        self.num_nodes = num_nodes
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray, fanouts=(15, 10)) -> Dict[str, np.ndarray]:
+        """Returns a padded subgraph: layered sampling seeds<-hop1<-hop2."""
+        nodes = [np.unique(seeds.astype(np.int32))]
+        edges_src, edges_dst = [], []
+        frontier = nodes[0]
+        for f in fanouts:
+            srcs, dsts = [], []
+            for v in frontier:
+                lo, hi = self.indptr[v], self.indptr[v + 1]
+                nbrs = self.src_sorted[lo:hi]
+                if len(nbrs) == 0:
+                    continue
+                take = nbrs if len(nbrs) <= f else self.rng.choice(nbrs, f, replace=False)
+                srcs.append(take)
+                dsts.append(np.full(len(take), v, np.int32))
+            if srcs:
+                srcs = np.concatenate(srcs)
+                dsts = np.concatenate(dsts)
+            else:
+                srcs = np.zeros(0, np.int32)
+                dsts = np.zeros(0, np.int32)
+            edges_src.append(srcs)
+            edges_dst.append(dsts)
+            frontier = np.unique(srcs)
+            nodes.append(frontier)
+        all_nodes = np.unique(np.concatenate(nodes))
+        remap = np.full(self.num_nodes, -1, np.int32)
+        remap[all_nodes] = np.arange(len(all_nodes), dtype=np.int32)
+        es = remap[np.concatenate(edges_src)] if edges_src else np.zeros(0, np.int32)
+        ed = remap[np.concatenate(edges_dst)] if edges_dst else np.zeros(0, np.int32)
+        return {
+            "node_ids": all_nodes,
+            "edge_src": es,
+            "edge_dst": ed,
+            "seed_local": remap[np.unique(seeds.astype(np.int32))],
+        }
+
+
+def pad_subgraph(sub: Dict[str, np.ndarray], feats: np.ndarray,
+                 labels: np.ndarray, max_nodes: int, max_edges: int) -> Dict:
+    """Pad a sampled subgraph to static shapes for jit."""
+    n = min(len(sub["node_ids"]), max_nodes)
+    e = min(len(sub["edge_src"]), max_edges)
+    nodes = np.zeros((max_nodes, feats.shape[1]), feats.dtype)
+    nodes[:n] = feats[sub["node_ids"][:n]]
+    lab = np.zeros((max_nodes,), np.int32)
+    lab[:n] = labels[sub["node_ids"][:n]]
+    node_mask = np.zeros((max_nodes,), bool)
+    # supervise only the seed nodes
+    seeds = sub["seed_local"][sub["seed_local"] < n]
+    node_mask[seeds] = True
+    es = np.zeros((max_edges,), np.int32)
+    ed = np.zeros((max_edges,), np.int32)
+    emask = np.zeros((max_edges,), bool)
+    keep = (sub["edge_src"][:e] < n) & (sub["edge_dst"][:e] < n)
+    es[:e] = np.where(keep, sub["edge_src"][:e], 0)
+    ed[:e] = np.where(keep, sub["edge_dst"][:e], 0)
+    emask[:e] = keep
+    return {"nodes": nodes, "labels": lab, "node_mask": node_mask,
+            "edge_src": es, "edge_dst": ed, "edge_mask": emask}

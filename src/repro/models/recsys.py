@@ -1,0 +1,244 @@
+"""Recsys architectures: FM, DeepFM, DCN-v2, DLRM (assigned archs).
+
+All four share the sparse-embedding substrate (``repro.models.embedding``)
+and a common batch layout:
+
+  batch = {"dense": [B, n_dense] float, "sparse": [B, n_sparse] int32,
+           "label": [B] float}
+
+The FM interaction uses Rendle's O(nk) sum-square identity
+  sum_{i<j} <v_i, v_j> x_i x_j = 1/2 * sum_k [(sum_i v_ik x_i)^2 - sum_i v_ik^2 x_i^2]
+(kernels/fm_interaction.py holds the fused Pallas version).
+
+Retrieval (`retrieval_cand` cells) goes through the SEP-LR top-K core:
+the query tower output is u(x), the candidate item table is T — exactly
+the paper's model class (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import MeshRules, dense_init, mlp_apply, mlp_params, shard
+from repro.models.embedding import embedding_lookup
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    arch: str                      # fm | deepfm | dcn_v2 | dlrm
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    vocab_per_field: int
+    mlp_dims: Tuple[int, ...] = ()           # deep tower (deepfm / dcn)
+    bot_mlp: Tuple[int, ...] = ()            # dlrm bottom
+    top_mlp: Tuple[int, ...] = ()            # dlrm top
+    n_cross_layers: int = 0                  # dcn_v2
+    compute_dtype: object = jnp.float32
+
+    @property
+    def total_vocab(self) -> int:
+        return self.n_sparse * self.vocab_per_field
+
+    @property
+    def interaction_input(self) -> int:
+        if self.arch == "dcn_v2":
+            return self.n_dense + self.n_sparse * self.embed_dim
+        if self.arch == "dlrm":
+            n = self.n_sparse + 1
+            return self.bot_mlp[-1] + n * (n - 1) // 2
+        return 0
+
+    def param_count(self) -> int:
+        import numpy as np
+        c = self.total_vocab * self.embed_dim
+        if self.arch in ("fm", "deepfm"):
+            c += self.total_vocab + 1          # linear weights + bias
+        if self.arch == "deepfm":
+            dims = (self.n_sparse * self.embed_dim,) + self.mlp_dims + (1,)
+            c += sum(dims[i] * dims[i+1] + dims[i+1] for i in range(len(dims)-1))
+        if self.arch == "dcn_v2":
+            d0 = self.interaction_input
+            c += self.n_cross_layers * (d0 * d0 + d0)
+            dims = (d0,) + self.mlp_dims + (1,)
+            c += sum(dims[i] * dims[i+1] + dims[i+1] for i in range(len(dims)-1))
+        if self.arch == "dlrm":
+            dims = (self.n_dense,) + self.bot_mlp
+            c += sum(dims[i] * dims[i+1] + dims[i+1] for i in range(len(dims)-1))
+            dims = (self.interaction_input,) + self.top_mlp
+            c += sum(dims[i] * dims[i+1] + dims[i+1] for i in range(len(dims)-1))
+        return c
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_params(config: RecsysConfig, key) -> Dict:
+    keys = jax.random.split(key, 8)
+    scale = 1.0 / jnp.sqrt(jnp.float32(config.embed_dim))
+    params: Dict = {
+        # one logical table: field f owns rows [f*V, (f+1)*V) — keeps a single
+        # shardable array instead of n_sparse small ones.
+        "embed": jax.random.normal(keys[0], (config.total_vocab, config.embed_dim),
+                                   jnp.float32) * scale,
+    }
+    if config.arch in ("fm", "deepfm"):
+        params["linear"] = jax.random.normal(keys[1], (config.total_vocab,),
+                                             jnp.float32) * 0.01
+        params["bias"] = jnp.zeros((), jnp.float32)
+    if config.arch == "deepfm":
+        dims = (config.n_sparse * config.embed_dim,) + config.mlp_dims + (1,)
+        params["deep"] = mlp_params(keys[2], dims)
+    if config.arch == "dcn_v2":
+        d0 = config.interaction_input
+        params["cross_w"] = dense_init(keys[3], (config.n_cross_layers, d0, d0))
+        params["cross_b"] = jnp.zeros((config.n_cross_layers, d0), jnp.float32)
+        dims = (d0,) + config.mlp_dims + (1,)
+        params["deep"] = mlp_params(keys[4], dims)
+    if config.arch == "dlrm":
+        params["bot"] = mlp_params(keys[5], (config.n_dense,) + config.bot_mlp)
+        params["top"] = mlp_params(keys[6], (config.interaction_input,) + config.top_mlp)
+    return params
+
+
+def param_specs(config: RecsysConfig, rules: MeshRules,
+                mode: str = "train") -> Dict:
+    """Embedding rows over tp (DLRM row-parallel); MLPs replicated (tiny)."""
+    tp = rules.tp
+    specs: Dict = {"embed": P(tp, None)}
+    if config.arch in ("fm", "deepfm"):
+        specs["linear"] = P(tp)
+        specs["bias"] = P()
+    if config.arch == "deepfm":
+        specs["deep"] = [{"w": P(None, None), "b": P(None)}
+                         for _ in range(len(config.mlp_dims) + 1)]
+    if config.arch == "dcn_v2":
+        specs["cross_w"] = P(None, None, None)
+        specs["cross_b"] = P(None, None)
+        specs["deep"] = [{"w": P(None, None), "b": P(None)}
+                         for _ in range(len(config.mlp_dims) + 1)]
+    if config.arch == "dlrm":
+        specs["bot"] = [{"w": P(None, None), "b": P(None)}
+                        for _ in range(len(config.bot_mlp))]
+        specs["top"] = [{"w": P(None, None), "b": P(None)}
+                        for _ in range(len(config.top_mlp))]
+    return specs
+
+
+def _field_offsets(config: RecsysConfig) -> Array:
+    return (jnp.arange(config.n_sparse, dtype=jnp.int32)
+            * config.vocab_per_field)
+
+
+def _gather_fields(params: Dict, sparse: Array, config: RecsysConfig,
+                   rules: MeshRules) -> Array:
+    """sparse: [B, F] per-field ids -> [B, F, d] embeddings."""
+    ids = sparse + _field_offsets(config)[None, :]
+    emb = embedding_lookup(params["embed"], ids)
+    return shard(emb, rules, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Interactions
+# ---------------------------------------------------------------------------
+
+
+def fm_interaction(emb: Array) -> Array:
+    """Rendle sum-square trick. emb: [B, F, d] -> [B] second-order term."""
+    s = jnp.sum(emb, axis=1)                 # [B, d]
+    sq = jnp.sum(emb * emb, axis=1)          # [B, d]
+    return 0.5 * jnp.sum(s * s - sq, axis=-1)
+
+
+def dot_interaction(vectors: Array) -> Array:
+    """DLRM pairwise dots. vectors: [B, n, d] -> [B, n(n-1)/2]."""
+    B, n, d = vectors.shape
+    gram = jnp.einsum("bnd,bmd->bnm", vectors, vectors)
+    iu, ju = jnp.triu_indices(n, k=1)
+    return gram[:, iu, ju]
+
+
+def cross_layer(x0: Array, x: Array, w: Array, b: Array) -> Array:
+    """DCN-v2 full-matrix cross: x' = x0 * (W x + b) + x."""
+    return x0 * (x @ w + b) + x
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss per architecture
+# ---------------------------------------------------------------------------
+
+
+def forward(params: Dict, batch: Dict, config: RecsysConfig,
+            rules: MeshRules = MeshRules()) -> Array:
+    """Returns logits [B]."""
+    emb = _gather_fields(params, batch["sparse"], config, rules)   # [B, F, d]
+    B = emb.shape[0]
+    if config.arch == "fm":
+        lin_ids = batch["sparse"] + _field_offsets(config)[None, :]
+        first = jnp.sum(jnp.take(params["linear"], lin_ids), axis=1)
+        return params["bias"] + first + fm_interaction(emb)
+    if config.arch == "deepfm":
+        lin_ids = batch["sparse"] + _field_offsets(config)[None, :]
+        first = jnp.sum(jnp.take(params["linear"], lin_ids), axis=1)
+        fm = params["bias"] + first + fm_interaction(emb)
+        deep = mlp_apply(params["deep"], emb.reshape(B, -1))[:, 0]
+        return fm + deep
+    if config.arch == "dcn_v2":
+        x0 = jnp.concatenate([batch["dense"], emb.reshape(B, -1)], axis=-1)
+        x0 = shard(x0, rules, "dp", None)
+        x = x0
+        for l in range(config.n_cross_layers):
+            x = cross_layer(x0, x, params["cross_w"][l], params["cross_b"][l])
+        return mlp_apply(params["deep"], x)[:, 0]
+    if config.arch == "dlrm":
+        bot = mlp_apply(params["bot"], batch["dense"], final_act=True)  # [B, d]
+        vectors = jnp.concatenate([bot[:, None, :], emb], axis=1)       # [B, 27, d]
+        inter = dot_interaction(vectors)
+        z = jnp.concatenate([bot, inter], axis=-1)
+        return mlp_apply(params["top"], z)[:, 0]
+    raise ValueError(config.arch)
+
+
+def loss_fn(params: Dict, batch: Dict, config: RecsysConfig,
+            rules: MeshRules = MeshRules()) -> Tuple[Array, Dict]:
+    logits = forward(params, batch, config, rules)
+    y = batch["label"].astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean(((logits > 0) == (y > 0.5)).astype(jnp.float32))
+    return loss, {"bce": loss, "acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Retrieval head (the paper's technique in-system)
+# ---------------------------------------------------------------------------
+
+
+def query_tower(params: Dict, batch: Dict, config: RecsysConfig,
+                rules: MeshRules = MeshRules()) -> Array:
+    """User/query embedding u(x) for SEP-LR retrieval. [B, d]."""
+    emb = _gather_fields(params, batch["sparse"], config, rules)
+    if config.arch == "dlrm" and config.n_dense:
+        bot = mlp_apply(params["bot"], batch["dense"], final_act=True)
+        return bot + jnp.mean(emb, axis=1)
+    return jnp.mean(emb, axis=1)
+
+
+def retrieval_scores(params: Dict, batch: Dict, candidates: Array,
+                     config: RecsysConfig,
+                     rules: MeshRules = MeshRules()) -> Array:
+    """Naive scoring of all candidates: [B, n_candidates]. The exact
+    top-K path goes through repro.core / repro.serving instead."""
+    u = query_tower(params, batch, config, rules)
+    return jnp.einsum("bd,md->bm", u, candidates)

@@ -1,0 +1,152 @@
+"""Roofline from the compiled dry-run artifact (no hardware required).
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes
+are NOT in cost_analysis — we parse the post-SPMD HLO text and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (the payload each participant handles).
+
+Hardware constants (TPU v5e-class, per the brief):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (per chip, one link direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shapes like:  bf16[8,512,128]{2,1,0}  or tuples (f32[...], f32[...])
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3|f8e5m2|s64|s32|s16|s8|u64|"
+                       r"u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective op kind from HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # `x = bf16[...] all-gather(...)`: opcode appears right after the
+        # result shape; skip fusion-comment mentions.
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                any(op == c or op == c + "-start" for c in _COLLECTIVES):
+            base = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+            if base is None or op.endswith("-done"):
+                continue
+            lhs = s.split("=")[0] + "= " + s.split("=", 1)[1].split(base)[0]
+            out[base] += _shape_bytes(lhs)
+            out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/FLOP fields are GLOBAL (across chips); cost_analysis() on a
+    post-SPMD module reports per-partition numbers, which ``from_compiled``
+    multiplies by n_chips. The three terms then match the brief's formulas:
+    t_x = global_quantity / (chips * per_chip_rate)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    n_chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step would sustain if it ran at
+        the bound: (model_flops / t_bound) / (chips * peak)."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.t_bound) / (self.n_chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def from_compiled(compiled, hlo_text: str, n_chips: int,
+                  model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # cost_analysis + the HLO text describe ONE partition of the SPMD
+    # program — scale to global totals.
+    flops = float(cost.get("flops", 0.0)) * n_chips
+    hbm = float(cost.get("bytes accessed", 0.0)) * n_chips
+    coll = parse_collective_bytes(hlo_text)
+    coll_bytes = float(sum(v for k, v in coll.items()
+                           if k != "count")) * n_chips
+    return Roofline(flops=flops, hbm_bytes=hbm, collective_bytes=coll_bytes,
+                    n_chips=n_chips, model_flops=model_flops)

@@ -1,0 +1,117 @@
+"""Top-K query serving: the paper's inference engine as a service layer.
+
+``TopKServer`` owns a SEP-LR catalogue + its sorted-list index and serves
+batched queries through any of the exact engines (naive / TA / BTA /
+norm-pruned / sharded). Requests are micro-batched; per-query pruning
+statistics (scores computed, depth) are aggregated for the benchmark
+harness — matching the paper's evaluation axis (query efficiency).
+
+``TwoStageRanker`` is the production recsys pattern from DESIGN.md §3:
+exact SEP-LR top-N retrieval (where the paper's algorithms apply) followed
+by full-model re-ranking of the N retrieved candidates (where they don't).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    SepLRModel,
+    TopKIndex,
+    blocked_topk_batched,
+    build_index,
+    naive_topk,
+    norm_pruned_topk,
+)
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_queries: int = 0
+    n_scored: int = 0
+    total_time_s: float = 0.0
+    depth_sum: int = 0
+
+    @property
+    def scores_per_query(self) -> float:
+        return self.n_scored / max(self.n_queries, 1)
+
+    @property
+    def us_per_query(self) -> float:
+        return 1e6 * self.total_time_s / max(self.n_queries, 1)
+
+
+class TopKServer:
+    def __init__(self, model: SepLRModel, max_batch: int = 64,
+                 block_size: int = 256):
+        self.model = model
+        self.index: TopKIndex = build_index(model.targets)
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.stats: Dict[str, ServeStats] = {}
+
+    def _record(self, method: str, res, dt: float, n: int):
+        s = self.stats.setdefault(method, ServeStats())
+        s.n_queries += n
+        s.n_scored += int(np.sum(np.asarray(res.n_scored)))
+        s.depth_sum += int(np.sum(np.asarray(res.depth)))
+        s.total_time_s += dt
+
+    def query(self, U: Array, k: int, method: str = "bta"):
+        """U: [B, R] (or [R]). Returns TopKResult batched like U."""
+        U = jnp.atleast_2d(U)
+        outs = []
+        t0 = time.perf_counter()
+        for i in range(0, U.shape[0], self.max_batch):
+            chunk = U[i: i + self.max_batch]
+            if method == "naive":
+                res = naive_topk(self.model.targets, chunk, k)
+            elif method == "bta":
+                res = blocked_topk_batched(self.model.targets, self.index,
+                                           chunk, k, self.block_size)
+            elif method == "norm":
+                res = jax.vmap(
+                    lambda u: norm_pruned_topk(
+                        self.model.targets, self.index.norm_order,
+                        self.index.norms_sorted, u, k, self.block_size)
+                )(chunk)
+            else:
+                raise ValueError(method)
+            outs.append(jax.tree_util.tree_map(np.asarray, res))
+        dt = time.perf_counter() - t0
+        res = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *outs)
+        self._record(method, res, dt, U.shape[0])
+        return res
+
+
+class TwoStageRanker:
+    """Exact SEP-LR retrieval -> full-model re-rank (DESIGN.md §3).
+
+    retrieval_model: SEP-LR over the candidate catalogue (u = query tower).
+    rerank_fn(query_batch, candidate_ids) -> scores of the retrieved set.
+    """
+
+    def __init__(self, retrieval: TopKServer,
+                 rerank_fn: Callable[[Dict, np.ndarray], np.ndarray],
+                 retrieve_n: int = 100):
+        self.retrieval = retrieval
+        self.rerank_fn = rerank_fn
+        self.retrieve_n = retrieve_n
+
+    def rank(self, query_batch: Dict, U: Array, k: int,
+             method: str = "bta"):
+        res = self.retrieval.query(U, self.retrieve_n, method=method)
+        cand = np.asarray(res.indices)                       # [B, N]
+        rerank = self.rerank_fn(query_batch, cand)           # [B, N]
+        order = np.argsort(-rerank, axis=1)[:, :k]
+        return (np.take_along_axis(cand, order, axis=1),
+                np.take_along_axis(rerank, order, axis=1))

@@ -1,0 +1,94 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce.
+
+int8 stochastic-free linear quantisation with **error feedback** (EF-SGD,
+Seide et al. / Karimireddy et al.): the quantisation residual is carried
+to the next step so compression bias does not accumulate. Intended for
+the "pod" mesh axis where links are ~10x slower than ICI — it cuts the
+collective-term bytes 4x (fp32) / 2x (bf16) at equal step count.
+
+``compressed_psum`` is a shard_map building block; the analytic effect on
+the roofline collective term is reported in EXPERIMENTS.md §Perf (this
+CPU container cannot measure DCI wall time).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+def quantize_int8(x: Array) -> Tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grad: Array, error: Array) -> Tuple[Array, Array, Array]:
+    """Error-feedback compression of one tensor.
+
+    Returns (q int8, scale, new_error). new_error = (g+e) - dequant(q)."""
+    target = grad + error
+    q, scale = quantize_int8(target)
+    new_error = target - dequantize_int8(q, scale)
+    return q, scale, new_error
+
+
+def compressed_psum(grad: Array, error: Array, axis: str):
+    """int8 all-reduce over ``axis`` with error feedback.
+
+    Mean of per-shard gradients. Wire format per tensor: int8 payload +
+    one fp32 scale; each contribution is dequantised with ITS OWN scale
+    at the reduction point (ring all-reduce dequantises on add), which the
+    psum below models semantically.
+    """
+    q, scale, new_error = ef_compress(grad, error)
+    total = jax.lax.psum(dequantize_int8(q, scale), axis)
+    n = jax.lax.axis_size(axis)
+    return total / n, new_error
+
+
+def make_compressed_allreduce(mesh, axis: str = "pod"):
+    """Tree-level wrapper: (grads, errors) -> (mean grads, new errors).
+
+    All leaves replicated over the other mesh axes; ``axis`` carries the
+    per-pod partial gradients (this mirrors a multi-pod DP step where the
+    in-pod reduction already happened over ICI).
+    """
+
+    def fn(grads: PyTree, errors: PyTree):
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        err_leaves = jax.tree_util.tree_leaves(errors)
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(tuple(P(axis) for _ in leaves),
+                      tuple(P(axis) for _ in err_leaves)),
+            out_specs=(tuple(P() for _ in leaves),
+                       tuple(P(axis) for _ in err_leaves)),
+            check_vma=False,
+        )
+        def _go(gs, es):
+            outs, new_es = [], []
+            for g, e in zip(gs, es):
+                # leading axis is the pod-stacked dim added by the caller
+                o, ne = compressed_psum(g[0], e[0], axis)
+                outs.append(o)
+                new_es.append(ne[None])
+            return tuple(outs), tuple(new_es)
+
+        outs, new_errs = _go(tuple(leaves), tuple(err_leaves))
+        return (jax.tree_util.tree_unflatten(treedef, list(outs)),
+                jax.tree_util.tree_unflatten(treedef, list(new_errs)))
+
+    return fn

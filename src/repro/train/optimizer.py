@@ -1,0 +1,112 @@
+"""Optimizers from scratch (no optax in this container): Adam(W), Adagrad,
+SGD-momentum — pytree-native, pjit-friendly (states inherit param sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"            # adamw | adam | adagrad | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+class OptState(NamedTuple):
+    step: Array
+    mu: PyTree       # first moment / momentum / accumulator
+    nu: PyTree       # second moment (Adam) or empty
+
+
+def init_state(cfg: OptimizerConfig, params: PyTree) -> OptState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    if cfg.kind in ("adam", "adamw"):
+        return OptState(jnp.int32(0), zeros,
+                        jax.tree_util.tree_map(jnp.zeros_like, params))
+    return OptState(jnp.int32(0), zeros, jax.tree_util.tree_map(
+        lambda x: jnp.zeros((), x.dtype), params))
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def apply_updates(cfg: OptimizerConfig, params: PyTree, grads: PyTree,
+                  state: OptState) -> Tuple[PyTree, OptState, Dict[str, Array]]:
+    """One optimizer step. Returns (new_params, new_state, metrics)."""
+    if cfg.grad_clip > 0:
+        grads, raw_norm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        raw_norm = global_norm(grads)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+
+    if cfg.kind in ("adam", "adamw"):
+        b1, b2 = cfg.b1, cfg.b2
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state.nu, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.kind == "adamw" and p.ndim >= 2:   # decay matrices only
+                delta = delta + cfg.weight_decay * p
+            return p - lr * delta
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        new_state = OptState(step, mu, nu)
+    elif cfg.kind == "adagrad":
+        mu = jax.tree_util.tree_map(lambda a, g: a + g * g, state.mu, grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, a, g: p - lr * g / (jnp.sqrt(a) + cfg.eps),
+            params, mu, grads)
+        new_state = OptState(step, mu, state.nu)
+    elif cfg.kind == "sgd":
+        mu = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g, state.mu, grads)
+        new_params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mu)
+        new_state = OptState(step, mu, state.nu)
+    else:
+        raise ValueError(cfg.kind)
+    return new_params, new_state, {"lr": lr, "grad_norm": raw_norm}

@@ -1,0 +1,131 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+* builds the jit'd train_step (donated params/opt-state buffers),
+* resumes from the latest valid checkpoint (params + optimizer + step),
+* fast-forwards the data stream so restarts are bitwise deterministic,
+* periodic async checkpoints; final blocking checkpoint,
+* simulated-preemption hook (``fail_at_step``) used by the restart tests,
+* straggler/heartbeat hook: per-step wall time is recorded; steps slower
+  than ``straggler_factor`` x median are counted and surfaced in metrics
+  (on real pods this feeds the reassignment policy; on CPU we record).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptimizerConfig, OptState, apply_updates, init_state
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    fail_at_step: int = -1          # simulate preemption (tests)
+    straggler_factor: float = 3.0
+
+
+class SimulatedPreemption(RuntimeError):
+    pass
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
+                    donate: bool = True):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        new_params, new_state, opt_m = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        out = {"loss": loss, **metrics, **opt_m}
+        return new_params, new_state, out
+
+    return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+
+class Trainer:
+    def __init__(self, loss_fn: Callable, params: PyTree,
+                 opt_cfg: OptimizerConfig, data: Iterator[Dict],
+                 cfg: TrainerConfig, to_device: Optional[Callable] = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.data = data
+        self.to_device = to_device or (lambda b: jax.tree_util.tree_map(
+            jnp.asarray, b))
+        self.train_step = make_train_step(loss_fn, opt_cfg)
+        self.params = params
+        self.opt_state = init_state(opt_cfg, params)
+        self.step = 0
+        self.history: list = []
+        self.manager = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+                        if cfg.ckpt_dir else None)
+
+    # -- checkpoint glue -------------------------------------------------------
+
+    def try_resume(self) -> bool:
+        if self.manager is None:
+            return False
+        state = {"params": self.params, "opt": self.opt_state}
+        restored, step = self.manager.restore(state)
+        if restored is None:
+            return False
+        self.params = restored["params"]
+        self.opt_state = OptState(*restored["opt"]) if not isinstance(
+            restored["opt"], OptState) else restored["opt"]
+        self.step = int(step)
+        return True
+
+    def save(self, block: bool = False):
+        if self.manager is None:
+            return
+        self.manager.save(self.step,
+                          {"params": self.params, "opt": self.opt_state},
+                          extra={"history_len": len(self.history)},
+                          block=block)
+
+    # -- main loop ---------------------------------------------------------------
+
+    def run(self) -> Dict[str, float]:
+        resumed = self.try_resume()
+        if hasattr(self.data, "skip") and resumed:
+            self.data.skip(self.step)
+        it = iter(self.data)
+        step_times: list = []
+        stragglers = 0
+        last = None
+        while self.step < self.cfg.total_steps:
+            batch = self.to_device(next(it))
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])  # blocks; acts as the step barrier
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times))
+            if len(step_times) > 5 and dt > self.cfg.straggler_factor * med:
+                stragglers += 1
+            self.step += 1
+            last = {k: float(v) for k, v in metrics.items()}
+            last.update(step=self.step, step_time=dt, stragglers=stragglers)
+            if self.step % self.cfg.log_every == 0 or self.step == 1:
+                self.history.append(last)
+            if self.manager and self.step % self.cfg.ckpt_every == 0:
+                self.save()
+            if self.step == self.cfg.fail_at_step:
+                # checkpoint state is whatever the last periodic save wrote —
+                # exactly the crash semantics the restart test verifies.
+                raise SimulatedPreemption(f"simulated failure @ {self.step}")
+        self.save(block=True)
+        return last or {}
