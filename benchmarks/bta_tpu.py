@@ -7,6 +7,10 @@ cutting rounds by ~B; the scores it wastes inside the final block are the
 price of vectorisation. The norm-pruned scan exploits catalogue norm decay
 (CF popularity / PLS spectra) with contiguous DMA — the layout the Pallas
 kernel consumes.
+
+Every engine here is invoked through the registry
+(``repro.core.engines``) — the same dispatch path the serving layer uses —
+with per-engine contexts carrying the block-size configuration.
 """
 import time
 
@@ -15,81 +19,63 @@ import numpy as np
 from benchmarks.common import csv_line, save_rows
 
 
+def _timed_engine(engine_name, ctx, U, k):
+    from repro.core.engines import get_engine
+    eng = get_engine(engine_name)
+    res = eng.run(ctx, U, k)                 # warm the jit cache
+    t0 = time.perf_counter()
+    res = eng.run(ctx, U, k)
+    np.asarray(res.values)
+    dt = time.perf_counter() - t0
+    return (float(np.mean(np.asarray(res.n_scored))),
+            dt / U.shape[0] * 1e6)
+
+
 def run(quick: bool = True):
     import jax.numpy as jnp
 
-    from repro.core import (blocked_topk, naive_topk, norm_pruned_topk,
-                            threshold_topk_from_index)
-    from repro.core.index import build_index
+    from repro.core.engines import EngineContext
     from repro.core.seplr import random_model
-    from repro.kernels.ops import MIPSCatalog
 
     rng = np.random.default_rng(4)
     M = 20000 if quick else 100000
     R, K = 50, 10
     model = random_model(rng, M, R, "lowrank_spectrum")
     T = np.asarray(model.targets)
-    idx = build_index(T)
-    Tj = jnp.asarray(T)
     spectrum = 1.0 / np.sqrt(1.0 + np.arange(R, dtype=np.float32))
-    Q = rng.standard_normal((5, R)).astype(np.float32) * spectrum
+    Q = jnp.asarray(rng.standard_normal((5, R)).astype(np.float32) * spectrum)
     rows = []
 
-    # exact TA reference counts
-    ta_scored = []
-    for u in Q:
-        r = threshold_topk_from_index(Tj, idx, jnp.asarray(u), K)
-        ta_scored.append(int(r.n_scored))
-    ta_mean = float(np.mean(ta_scored))
+    ctx = EngineContext(T, block_size=256)
+
+    # exact TA reference counts (registry "ta" = blocked strategy, B=1)
+    ta_mean, _ = _timed_engine("ta", ctx, Q, K)
 
     for block in (64, 256, 1024):
-        scored, times = [], []
-        for u in Q:
-            t0 = time.perf_counter()
-            r = blocked_topk(Tj, idx.order_desc, idx.t_sorted_desc,
-                             jnp.asarray(u), K, block_size=block)
-            r.values.block_until_ready()
-            times.append(time.perf_counter() - t0)
-            scored.append(int(r.n_scored))
+        ctx_b = EngineContext(T, index=ctx.index, block_size=block)
+        scored, us = _timed_engine("bta", ctx_b, Q, K)
         rows.append({"engine": f"bta_b{block}", "M": M, "K": K,
-                     "avg_scores": float(np.mean(scored)),
-                     "vs_ta": float(np.mean(scored)) / max(ta_mean, 1),
-                     "us_per_query": float(np.mean(times)) * 1e6})
+                     "avg_scores": scored,
+                     "vs_ta": scored / max(ta_mean, 1),
+                     "us_per_query": us})
 
     # norm-pruned scan
-    scored, times = [], []
-    for u in Q:
-        t0 = time.perf_counter()
-        r = norm_pruned_topk(Tj, idx.norm_order, idx.norms_sorted,
-                             jnp.asarray(u), K, block_size=256)
-        r.values.block_until_ready()
-        times.append(time.perf_counter() - t0)
-        scored.append(int(r.n_scored))
+    scored, us = _timed_engine("norm", ctx, Q, K)
     rows.append({"engine": "norm_pruned", "M": M, "K": K,
-                 "avg_scores": float(np.mean(scored)),
-                 "vs_ta": float(np.mean(scored)) / max(ta_mean, 1),
-                 "us_per_query": float(np.mean(times)) * 1e6})
+                 "avg_scores": scored, "vs_ta": scored / max(ta_mean, 1),
+                 "us_per_query": us})
 
-    # Pallas kernel (interpret mode on CPU)
-    cat = MIPSCatalog(T, block_m=256)
-    scored, times = [], []
-    for u in Q:
-        t0 = time.perf_counter()
-        vals, ids, stats = cat.query(jnp.asarray(u), K)
-        vals.block_until_ready()
-        times.append(time.perf_counter() - t0)
-        scored.append(int(stats[0]))
+    # Pallas kernel (interpret autodetect: interpreter on CPU, compiled on TPU)
+    scored, us = _timed_engine("pallas", ctx, Q, K)
     rows.append({"engine": "pallas_topk_mips(interpret)", "M": M, "K": K,
-                 "avg_scores": float(np.mean(scored)),
-                 "vs_ta": float(np.mean(scored)) / max(ta_mean, 1),
-                 "us_per_query": float(np.mean(times)) * 1e6})
+                 "avg_scores": scored, "vs_ta": scored / max(ta_mean, 1),
+                 "us_per_query": us})
 
     # naive matmul baseline
-    t0 = time.perf_counter()
-    naive_topk(Tj, jnp.asarray(Q), K).values.block_until_ready()
+    _, us = _timed_engine("naive", ctx, Q, K)
     rows.append({"engine": "naive_matmul", "M": M, "K": K,
                  "avg_scores": M, "vs_ta": M / max(ta_mean, 1),
-                 "us_per_query": (time.perf_counter() - t0) / len(Q) * 1e6})
+                 "us_per_query": us})
     rows.append({"engine": "ta_reference", "M": M, "K": K,
                  "avg_scores": ta_mean, "vs_ta": 1.0, "us_per_query": None})
     save_rows("bta_tpu", rows)

@@ -1,0 +1,68 @@
+"""Registry sweep — every registered engine on one catalogue.
+
+The benchmark equivalent of ``TopKServer.available_engines()``: whatever
+is in ``repro.core.engines`` gets measured (wall time + the paper's
+score-count metric) and, when it advertises ``exact``, checked against
+the naive scan. A newly registered engine shows up here with zero harness
+changes — the point of the registry layer (DESIGN.md §1).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, save_rows
+
+
+def run(quick: bool = True):
+    import jax.numpy as jnp
+
+    from repro.core import naive_topk
+    from repro.core.engines import EngineContext, list_engines, select_engine
+
+    rng = np.random.default_rng(7)
+    M = 8000 if quick else 50000
+    R, K, B = 32, 10, 8
+    T = rng.standard_normal((M, R)).astype(np.float32)
+    T *= (1.0 / np.sqrt(1.0 + np.arange(M, dtype=np.float32)))[:, None]
+    ctx = EngineContext(T, block_size=256)
+    U = jnp.asarray(rng.standard_normal((B, R)).astype(np.float32))
+    ref = np.sort(np.asarray(naive_topk(ctx.targets, U, K).values), axis=1)
+
+    rows = []
+    for eng in list_engines():
+        run_as = select_engine(ctx, U) if eng.name == "auto" else eng
+        res = run_as.run(ctx, U, K)          # warm the jit cache
+        t0 = time.perf_counter()
+        res = run_as.run(ctx, U, K)
+        np.asarray(res.values)
+        dt = time.perf_counter() - t0
+        exact_ok = bool(np.allclose(
+            np.sort(np.asarray(res.values), axis=1), ref, atol=1e-3))
+        rows.append({
+            "engine": eng.name,
+            "resolved": run_as.name,
+            "backend": eng.backend,
+            "exact": eng.exact,
+            "exact_verified": exact_ok,
+            "needs_index": eng.needs_index,
+            "M": M, "R": R, "K": K, "batch": B,
+            "avg_scores": float(np.mean(np.asarray(res.n_scored))),
+            "us_per_query": dt / B * 1e6,
+        })
+    save_rows("engines", rows)
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    bad = [r["engine"] for r in rows if r["exact"] and not r["exact_verified"]]
+    derived = ";".join(
+        f"{r['engine']}={r['avg_scores']:.0f}sc" for r in rows)
+    derived += f";exact_failures={bad or 'none'}"
+    fastest = min(rows, key=lambda r: r["us_per_query"])
+    print(csv_line("engines", fastest["us_per_query"], derived))
+    assert not bad, f"exact engines diverged from naive: {bad}"
+
+
+if __name__ == "__main__":
+    main()

@@ -12,24 +12,13 @@ EXPERIMENTS.md). The paper's claims under test:
 """
 import numpy as np
 
-from benchmarks.common import csv_line, save_rows, timed
+from benchmarks.common import csv_line, engine_counts, save_rows, timed
 
 
 def _ta_counts(T, U, k):
-    """exact TA score counts via the (validated) JAX while_loop TA."""
-    import jax.numpy as jnp
-
-    from repro.core import threshold_topk_from_index
-    from repro.core.index import build_index
-
-    idx = build_index(T)
-    Tj = jnp.asarray(T)
-    n_scored, depths = [], []
-    for u in U:
-        r = threshold_topk_from_index(Tj, idx, jnp.asarray(u), k)
-        n_scored.append(int(r.n_scored))
-        depths.append(int(r.depth))
-    return float(np.mean(n_scored)), float(np.mean(depths))
+    """Exact TA score counts via the registry "ta" engine (the driver's
+    liveness gating keeps the batched counts per-query faithful)."""
+    return engine_counts(T, U, k, engine="ta")
 
 
 def run(quick: bool = True):

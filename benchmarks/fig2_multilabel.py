@@ -16,8 +16,8 @@ from benchmarks.common import csv_line, save_rows
 def run(quick: bool = True):
     import jax.numpy as jnp
 
-    from repro.core import (naive_topk, partial_threshold_topk_np,
-                            threshold_topk_from_index)
+    from repro.core import naive_topk, partial_threshold_topk_np
+    from repro.core.engines import EngineContext, get_engine
     from repro.core.index import build_index
     from repro.data.synthetic import multilabel_factors
 
@@ -35,14 +35,15 @@ def run(quick: bool = True):
         Q = rng.standard_normal((n_queries, n_feat)).astype(np.float32)
         if kind == "ridge":
             Q *= (1.0 / np.sqrt(1.0 + np.arange(n_feat, dtype=np.float32)))
+        ctx = EngineContext(Tj, index=idx)
+        ta = get_engine("ta")
+        Qj = jnp.asarray(Q)
         for k in ks:
-            # wall time + counts: TA vs naive
+            # wall time + counts: TA vs naive — both through registry dispatch
             t0 = time.perf_counter()
-            scored = []
-            for u in Q:
-                r = threshold_topk_from_index(Tj, idx, jnp.asarray(u), k)
-                scored.append(int(r.n_scored))
-            jnp.asarray(0.0).block_until_ready()
+            res = ta.run(ctx, Qj, k)
+            scored = np.asarray(res.n_scored)
+            res.values.block_until_ready()
             t_ta = (time.perf_counter() - t0) / n_queries
             t0 = time.perf_counter()
             for u in Q:

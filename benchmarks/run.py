@@ -17,8 +17,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bta_tpu, fig1_cf, fig2_multilabel, fig3_halted,
-                            table1_toy, table4_scaling)
+    from benchmarks import (bta_tpu, engines, fig1_cf, fig2_multilabel,
+                            fig3_halted, table1_toy, table4_scaling)
     mods = {
         "table1_toy": table1_toy,
         "fig1_cf": fig1_cf,
@@ -26,6 +26,7 @@ def main() -> None:
         "fig3_halted": fig3_halted,
         "table4_scaling": table4_scaling,
         "bta_tpu": bta_tpu,
+        "engines": engines,   # sweeps every engine in the registry
     }
     if args.only:
         mods = {k: v for k, v in mods.items() if k in args.only.split(",")}

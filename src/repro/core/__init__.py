@@ -9,9 +9,25 @@ Public API:
   blocked_topk (+batched)         — TPU-native Block Threshold Algorithm
   norm_pruned_topk                — Cauchy-Schwarz norm screening (beyond paper)
   sharded_naive_topk / sharded_blocked_topk / hierarchical_merge_topk
+
+Engine layer (DESIGN.md):
+  pruned_block_scan, ScanStrategy — the unified driver every engine runs on
+  ta_round_strategy / blocked_lists_strategy / norm_block_strategy
+  Engine, EngineContext, register_engine, get_engine, list_engines,
+  engine_names, select_engine     — the name-keyed engine registry
 """
 
 from repro.core.blocked import blocked_topk, blocked_topk_batched, norm_pruned_topk
+from repro.core.driver import ScanState, ScanStrategy, pruned_block_scan
+from repro.core.engines import (
+    Engine,
+    EngineContext,
+    engine_names,
+    get_engine,
+    list_engines,
+    register_engine,
+    select_engine,
+)
 from repro.core.fagin import FaginStats, fagin_topk_np
 from repro.core.index import TopKIndex, build_index
 from repro.core.naive import TopKResult, naive_topk
@@ -31,6 +47,11 @@ from repro.core.sharded import (
     sharded_blocked_topk,
     sharded_naive_topk,
 )
+from repro.core.strategies import (
+    blocked_lists_strategy,
+    norm_block_strategy,
+    ta_round_strategy,
+)
 from repro.core.threshold import (
     TAStats,
     threshold_topk,
@@ -48,4 +69,9 @@ __all__ = [
     "from_matrix_factorization", "from_linear_multilabel",
     "from_pairwise_kronecker", "kronecker_query", "normalize_query",
     "random_model",
+    # engine layer
+    "ScanState", "ScanStrategy", "pruned_block_scan",
+    "ta_round_strategy", "blocked_lists_strategy", "norm_block_strategy",
+    "Engine", "EngineContext", "register_engine", "get_engine",
+    "list_engines", "engine_names", "select_engine",
 ]

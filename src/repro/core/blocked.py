@@ -19,35 +19,27 @@ blocks with Cauchy-Schwarz ``s(x,y) <= ||u|| * max_norm(block)`` (LEMP-style
 screening, but block-synchronous for the MXU; gathers are contiguous, which
 the Pallas kernel exploits).
 
-Negative query weights are handled without materialising per-query flipped
-lists: depth ``d`` in list ``r`` reads position ``M-1-d`` when ``u_r < 0``
-(a gather-side index transform, not a data transform).
+Both are thin wrappers: the loop itself is
+:func:`repro.core.driver.pruned_block_scan` running
+:func:`repro.core.strategies.blocked_lists_strategy` /
+:func:`repro.core.strategies.norm_block_strategy`. ``block_size=1``
+recovers paper-faithful TA rounds; ``max_blocks`` is the uniform halted
+variant across every strategy.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.driver import pruned_block_scan
 from repro.core.index import TopKIndex
 from repro.core.naive import TopKResult
-from repro.core.threshold import _dedup_first_occurrence
+from repro.core.strategies import blocked_lists_strategy, norm_block_strategy
 
 Array = jnp.ndarray
-NEG_INF = float("-inf")
-
-
-class _BTAState(NamedTuple):
-    b: Array            # current block
-    top_vals: Array     # [K]
-    top_ids: Array      # [K]
-    visited: Array      # [M] bool
-    n_scored: Array
-    lower: Array
-    upper: Array
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))
@@ -72,62 +64,11 @@ def blocked_topk(
         degenerates to the paper's TA round structure.
       max_blocks: optional round budget — the halted variant.
     """
-    M, R = targets.shape
-    k = min(k, M)
-    n_blocks = -(-M // block_size)
-    block_cap = n_blocks if max_blocks < 0 else min(max_blocks, n_blocks)
-    neg = u < 0  # [R] walk ascending when the weight is negative
-
-    def cond(s: _BTAState):
-        return jnp.logical_and(s.b < block_cap, s.lower < s.upper)
-
-    active = u != 0  # sparse queries: zero-weight lists are never walked
-
-    def body(s: _BTAState):
-        d0 = s.b * block_size
-        cols = jnp.minimum(d0 + jnp.arange(block_size, dtype=jnp.int32), M - 1)
-        # per-list effective positions (sign flip = read from the far end)
-        cols_eff = jnp.where(neg[:, None], M - 1 - cols[None, :], cols[None, :])
-        ids = jnp.take_along_axis(order_desc, cols_eff, axis=1).reshape(-1)  # [R*B]
-        active_rep = jnp.repeat(active, block_size,
-                                total_repeat_length=R * block_size)
-        # sentinel id M for inactive lists: never shadows active dedup
-        ids_eff = jnp.where(active_rep, ids, M)
-        fresh = jnp.logical_and(
-            _dedup_first_occurrence(ids_eff, M + 1),
-            jnp.logical_and(active_rep, ~s.visited[ids]))
-        scores = targets[ids] @ u
-        masked = jnp.where(fresh, scores, NEG_INF)
-        cand_vals = jnp.concatenate([s.top_vals, masked])
-        cand_ids = jnp.concatenate([s.top_ids, ids])
-        top_vals, pos = jax.lax.top_k(cand_vals, k)
-        top_ids = cand_ids[pos]
-        # bound at the block's last processed depth
-        end = jnp.minimum(d0 + block_size - 1, M - 1)
-        end_eff = jnp.where(neg, M - 1 - end, end)
-        t_end = t_sorted_desc[jnp.arange(R), end_eff]
-        return _BTAState(
-            b=s.b + 1,
-            top_vals=top_vals,
-            top_ids=top_ids,
-            visited=s.visited.at[ids].max(active_rep),
-            n_scored=s.n_scored + jnp.sum(fresh).astype(jnp.int32),
-            lower=top_vals[k - 1],
-            upper=jnp.sum(u * t_end),
-        )
-
-    init = _BTAState(
-        b=jnp.int32(0),
-        top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
-        top_ids=jnp.full((k,), -1, dtype=jnp.int32),
-        visited=jnp.zeros((M,), dtype=bool),
-        n_scored=jnp.int32(0),
-        lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
-        upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
-    )
-    final = jax.lax.while_loop(cond, body, init)
-    return TopKResult(final.top_vals, final.top_ids, final.n_scored,
-                      final.b * block_size)
+    strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u,
+                                      block_size)
+    res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
+    # public depth unit is list depth, not blocks
+    return res._replace(depth=res.depth * block_size)
 
 
 def blocked_topk_batched(
@@ -142,7 +83,9 @@ def blocked_topk_batched(
 
     Each query carries its own bound state; the vmapped while_loop runs
     until the slowest query terminates (lockstep on TPU), which is the
-    batched-serving semantics discussed in DESIGN.md §4.
+    batched-serving semantics discussed in DESIGN.md §4. The driver's
+    per-query liveness gating keeps ``n_scored``/``depth`` faithful to the
+    sequential algorithm even for queries that certified early.
     """
     fn = functools.partial(
         blocked_topk, k=k, block_size=block_size, max_blocks=max_blocks
@@ -157,16 +100,7 @@ def blocked_topk_batched(
 # ---------------------------------------------------------------------------
 
 
-class _NormState(NamedTuple):
-    b: Array
-    top_vals: Array
-    top_ids: Array
-    n_scored: Array
-    lower: Array
-    upper: Array
-
-
-@functools.partial(jax.jit, static_argnames=("k", "block_size"))
+@functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))
 def norm_pruned_topk(
     targets: Array,
     norm_order: Array,
@@ -174,6 +108,7 @@ def norm_pruned_topk(
     u: Array,
     k: int,
     block_size: int = 256,
+    max_blocks: int = -1,
 ) -> TopKResult:
     """Exact top-K scanning blocks in decreasing-norm order.
 
@@ -183,45 +118,10 @@ def norm_pruned_topk(
     Best when the catalogue norm spectrum decays (CF popularity, PLS factor
     scales); degenerates to a full scan for constant-norm catalogues
     (e.g. cosine-normalised items), where BTA should be used instead.
+
+    ``max_blocks`` is the uniform halted variant (same contract as
+    :func:`blocked_topk`).
     """
-    M = targets.shape[0]
-    k = min(k, M)
-    n_blocks = -(-M // block_size)
-    u_norm = jnp.linalg.norm(u)
-
-    # pad ids by clamping (duplicates only re-score already-kept items and
-    # cannot enter the top-K twice because values tie and top_k is stable
-    # on the concatenated layout: kept entries come first).
-    def cond(s: _NormState):
-        return jnp.logical_and(s.b < n_blocks, s.lower < s.upper)
-
-    def body(s: _NormState):
-        d0 = s.b * block_size
-        rows = jnp.minimum(d0 + jnp.arange(block_size, dtype=jnp.int32), M - 1)
-        valid = (d0 + jnp.arange(block_size, dtype=jnp.int32)) < M
-        ids = norm_order[rows]
-        scores = jnp.where(valid, targets[ids] @ u, NEG_INF)
-        cand_vals = jnp.concatenate([s.top_vals, scores])
-        cand_ids = jnp.concatenate([s.top_ids, ids])
-        top_vals, pos = jax.lax.top_k(cand_vals, k)
-        next_start = jnp.minimum((s.b + 1) * block_size, M - 1)
-        return _NormState(
-            b=s.b + 1,
-            top_vals=top_vals,
-            top_ids=cand_ids[pos],
-            n_scored=s.n_scored + jnp.sum(valid).astype(jnp.int32),
-            lower=top_vals[k - 1],
-            upper=u_norm * norms_sorted[next_start],
-        )
-
-    init = _NormState(
-        b=jnp.int32(0),
-        top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
-        top_ids=jnp.full((k,), -1, dtype=jnp.int32),
-        n_scored=jnp.int32(0),
-        lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
-        upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
-    )
-    final = jax.lax.while_loop(cond, body, init)
-    return TopKResult(final.top_vals, final.top_ids, final.n_scored,
-                      final.b * block_size)
+    strategy = norm_block_strategy(norm_order, norms_sorted, u, block_size)
+    res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
+    return res._replace(depth=res.depth * block_size)

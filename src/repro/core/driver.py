@@ -1,0 +1,164 @@
+"""Unified pruned-block-scan driver (DESIGN.md §2).
+
+Every exact engine in this repo — the paper's Threshold Algorithm, the
+TPU-native Block Threshold Algorithm, and the norm-ordered Cauchy-Schwarz
+scan — is the SAME state machine:
+
+    while lower_bound < upper_bound and blocks remain:
+        ids    <- enumerate the next block of candidates
+        scores <- score the fresh candidates against the query
+        top-K  <- merge
+        bounds <- tighten (lower = running K-th best; upper = strategy bound)
+
+:func:`pruned_block_scan` is that state machine, written once as a
+``jax.lax.while_loop``, parameterised by a :class:`ScanStrategy` that
+answers three questions — *which* candidates a block holds
+(``candidates``), *how* to score them (``score``, defaulting to the dense
+gather + matvec every current engine uses), and what *upper bound* holds
+for every item not yet enumerated after the block (``bound``).
+
+Two properties the copy-pasted per-engine loops did not have:
+
+* **Uniform halting** — ``max_steps`` caps any strategy, so the paper's
+  halted TA (§4.3) is a driver argument, not a per-engine reimplementation.
+* **Faithful batched statistics** — every state update is gated on the
+  per-query ``live`` predicate, so under ``jax.vmap`` a query that has
+  already certified its top-K stops accumulating ``n_scored``/``depth``
+  even though the lockstep loop keeps running for slower queries in the
+  batch. Counts therefore match the sequential oracle exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.naive import TopKResult
+
+Array = jnp.ndarray
+
+NEG_INF = float("-inf")
+
+
+def _dedup_first_occurrence(ids: Array, m: int) -> Array:
+    """Boolean mask: True where ids[i] is the first occurrence of that id.
+
+    Scatter-min of positions — O(|ids|) work, O(M) memory, jit-friendly.
+    """
+    n = ids.shape[0]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    first_pos = jnp.full((m,), n, dtype=jnp.int32).at[ids].min(pos)
+    return first_pos[ids] == pos
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanStrategy:
+    """What a pruned-scan engine must answer; everything else is the driver.
+
+    Attributes:
+      candidates: ``step -> (ids [C], active [C])`` — the candidate item ids
+        enumerated by block ``step`` plus a mask of which slots are real
+        (inactive lists, tail padding). ``C`` is static.
+      bound: ``step -> scalar`` — an upper bound on the score of every item
+        NOT yet enumerated once block ``step`` has been consumed. This is
+        the exactness certificate: the scan may stop as soon as the running
+        K-th best reaches it.
+      num_steps: static number of blocks needed to enumerate the whole
+        catalogue (the exact engine's worst case).
+      track_visited: list-based strategies enumerate the same item from
+        several lists and need the driver's visited-set + dedup pass;
+        partition-based strategies (norm blocks) never repeat an item and
+        skip that O(M) state entirely.
+      score: optional ``(ids, active) -> scores [C]`` override; ``None``
+        uses the dense gather + matvec ``targets[ids] @ u``.
+    """
+
+    candidates: Callable[[Array], Tuple[Array, Array]]
+    bound: Callable[[Array], Array]
+    num_steps: int
+    track_visited: bool = True
+    score: Optional[Callable[[Array, Array], Array]] = None
+
+
+class ScanState(NamedTuple):
+    step: Array         # blocks consumed
+    top_vals: Array     # [K] running top scores, descending
+    top_ids: Array      # [K] their item ids
+    visited: Array      # [M] bool ([1] dummy when the strategy never repeats)
+    n_scored: Array     # score evaluations (the paper's cost metric)
+    lower: Array        # running K-th best
+    upper: Array        # strategy bound on every unseen item
+
+
+def pruned_block_scan(
+    targets: Array,
+    u: Array,
+    strategy: ScanStrategy,
+    k: int,
+    max_steps: int = -1,
+) -> TopKResult:
+    """Run ``strategy`` to exactness (or to the ``max_steps`` halt budget).
+
+    Returns a :class:`TopKResult` whose ``depth`` field is the number of
+    *blocks* consumed; engines convert to their public depth unit
+    (TA rounds, list depth = blocks * block_size, ...).
+    """
+    M = targets.shape[0]
+    k = min(k, M)
+    cap = strategy.num_steps if max_steps < 0 else min(max_steps,
+                                                       strategy.num_steps)
+    score = strategy.score or (lambda ids, active: targets[ids] @ u)
+
+    def cond(s: ScanState):
+        return jnp.logical_and(s.step < cap, s.lower < s.upper)
+
+    def body(s: ScanState):
+        # per-query liveness: under vmap the lockstep loop keeps running for
+        # the slowest query; frozen lanes must not mutate state (else the
+        # paper's score-count metric is inflated for fast queries).
+        live = jnp.logical_and(s.step < cap, s.lower < s.upper)
+        ids, active = strategy.candidates(s.step)
+        if strategy.track_visited:
+            # sentinel id M for inactive slots: never shadows an active
+            # occurrence of the same item in the dedup pass
+            ids_eff = jnp.where(active, ids, M)
+            fresh = jnp.logical_and(
+                _dedup_first_occurrence(ids_eff, M + 1),
+                jnp.logical_and(active, ~s.visited[ids]))
+            visited = s.visited.at[ids].max(active)
+        else:
+            fresh = active
+            visited = s.visited
+        scores = score(ids, active)
+        masked = jnp.where(fresh, scores, NEG_INF)
+        cand_vals = jnp.concatenate([s.top_vals, masked])
+        cand_ids = jnp.concatenate([s.top_ids, ids])
+        top_vals, pos = jax.lax.top_k(cand_vals, k)
+        nxt = ScanState(
+            step=s.step + 1,
+            top_vals=top_vals,
+            top_ids=cand_ids[pos],
+            visited=visited,
+            n_scored=s.n_scored + jnp.sum(fresh).astype(jnp.int32),
+            lower=top_vals[k - 1],
+            upper=strategy.bound(s.step),
+        )
+        return jax.tree_util.tree_map(
+            lambda new, old: jnp.where(live, new, old), nxt, s)
+
+    visited0 = jnp.zeros((M if strategy.track_visited else 1,), dtype=bool)
+    init = ScanState(
+        step=jnp.int32(0),
+        top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
+        top_ids=jnp.full((k,), -1, dtype=jnp.int32),
+        visited=visited0,
+        n_scored=jnp.int32(0),
+        lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
+        upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
+    )
+    final = jax.lax.while_loop(cond, body, init)
+    return TopKResult(final.top_vals, final.top_ids, final.n_scored,
+                      final.step)

@@ -1,0 +1,255 @@
+"""Engine registry: every top-K engine behind one name-keyed interface.
+
+The serving layer, the benchmark harness, and tests all dispatch through
+this registry (DESIGN.md §1) instead of hand-rolled ``if/elif`` chains.
+An :class:`Engine` bundles the callable with capability metadata (exact?
+needs the sorted-list index? batched? which backend executes it?) so
+callers can enumerate, filter, and sweep engines they have never heard of
+— which is how future engines (LEMP-style per-bucket bounds, sharded
+variants, approximate modes) become reachable from every layer by adding
+one ``register`` call.
+
+Engines run against an :class:`EngineContext` — the catalogue plus lazily
+built derived state (sorted-list index, Pallas catalogue) shared across
+queries, so a server builds it once and every engine reuses it.
+
+Registered engines:
+
+==========  =======  ===========  ========  ==================================
+name        exact    needs_index  backend   algorithm
+==========  =======  ===========  ========  ==================================
+``naive``   yes      no           jax       full matmul + top_k
+``ta``      yes      yes          jax       TA rounds (blocked strategy, B=1)
+``bta``     yes      yes          jax       Block Threshold Algorithm
+``norm``    yes      yes          jax       Cauchy-Schwarz norm-block scan
+``pallas``  yes      yes          pallas    norm-block scan as a TPU kernel
+``auto``    yes      yes          dispatch  picks per batch (see below)
+==========  =======  ===========  ========  ==================================
+
+``auto`` picks per query batch: sparse batches go to ``ta`` (zero-weight
+lists are never walked, so TA's per-round work collapses to nnz(u)); dense
+batches over catalogues whose norm spectrum decays go to the norm scan
+(``pallas`` on TPU, ``norm`` elsewhere); flat-spectrum dense batches go to
+``bta``.
+
+Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
+``blocked -> bta``, ``norm_pruned -> norm``, ``topk_mips -> pallas``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocked import blocked_topk_batched, norm_pruned_topk
+from repro.core.index import TopKIndex, build_index
+from repro.core.naive import TopKResult, naive_topk
+
+Array = jnp.ndarray
+
+
+class EngineContext:
+    """Catalogue + lazily built per-engine state, shared across queries.
+
+    Args:
+      targets: ``[M, R]`` catalogue factors.
+      index: optional prebuilt :class:`TopKIndex` (built lazily otherwise).
+      block_size: depth/block granularity handed to blocked engines.
+      max_blocks: uniform halting budget (``-1`` = run to exactness).
+      interpret: Pallas execution mode (``None`` = autodetect by backend).
+    """
+
+    def __init__(self, targets, index: Optional[TopKIndex] = None,
+                 block_size: int = 256, max_blocks: int = -1,
+                 interpret=None):
+        self.targets = jnp.asarray(targets, dtype=jnp.float32)
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        self.interpret = interpret
+        self._index = index
+        self._catalog = None
+        self._norm_decay = None
+
+    @property
+    def num_targets(self) -> int:
+        return int(self.targets.shape[0])
+
+    @property
+    def index(self) -> TopKIndex:
+        if self._index is None:
+            self._index = build_index(self.targets)
+        return self._index
+
+    @property
+    def catalog(self):
+        """Norm-ordered Pallas catalogue (built on first pallas query)."""
+        if self._catalog is None:
+            from repro.kernels.ops import MIPSCatalog
+            self._catalog = MIPSCatalog(np.asarray(self.targets),
+                                        block_m=self.block_size)
+        return self._catalog
+
+    @property
+    def norm_decay(self) -> float:
+        """Norm at the 10th-percentile depth over the head norm (<= 1).
+
+        A catalogue constant, cached so per-batch `auto` dispatch does not
+        re-transfer the norm spectrum from device on every query chunk.
+        """
+        if self._norm_decay is None:
+            norms = np.asarray(self.index.norms_sorted)
+            head = max(float(norms[0]), 1e-12)
+            decayed = float(
+                norms[min(len(norms) - 1, max(1, len(norms) // 10))])
+            self._norm_decay = decayed / head
+        return self._norm_decay
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """A registered engine: callable + capability metadata."""
+
+    name: str
+    run: Callable[[EngineContext, Array, int], TopKResult]  # (ctx, U[B,R], k)
+    exact: bool = True
+    needs_index: bool = True
+    supports_batch: bool = True
+    backend: str = "jax"
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Engine] = {}
+_ALIASES: Dict[str, str] = {
+    "threshold": "ta",
+    "blocked": "bta",
+    "norm_pruned": "norm",
+    "topk_mips": "pallas",
+}
+
+
+def register_engine(engine: Engine) -> Engine:
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def engine_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def list_engines(exact: Optional[bool] = None,
+                 backend: Optional[str] = None,
+                 needs_index: Optional[bool] = None) -> List[Engine]:
+    out = []
+    for name in engine_names():
+        e = _REGISTRY[name]
+        if exact is not None and e.exact != exact:
+            continue
+        if backend is not None and e.backend != backend:
+            continue
+        if needs_index is not None and e.needs_index != needs_index:
+            continue
+        out.append(e)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Built-in engines
+# ---------------------------------------------------------------------------
+
+
+def _naive_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    return naive_topk(ctx.targets, U, k)
+
+
+def _ta_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    # blocked strategy at block_size=1 is id-for-id the paper's TA rounds
+    # (and stays O(R) memory per query under vmap, unlike flipped views)
+    return blocked_topk_batched(ctx.targets, ctx.index, U, k, block_size=1,
+                                max_blocks=ctx.max_blocks)
+
+
+def _bta_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    return blocked_topk_batched(ctx.targets, ctx.index, U, k,
+                                ctx.block_size, ctx.max_blocks)
+
+
+def _norm_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    idx = ctx.index
+
+    def one(u):
+        return norm_pruned_topk(ctx.targets, idx.norm_order,
+                                idx.norms_sorted, u, k, ctx.block_size,
+                                ctx.max_blocks)
+
+    return jax.vmap(one)(U)
+
+
+def _pallas_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    cat = ctx.catalog
+    vals, ids, stats = cat.query_batch(U, k, interpret=ctx.interpret)
+    # stats = (rows scored incl. block padding, blocks visited)
+    return TopKResult(vals, ids, stats[:, 0],
+                      stats[:, 1] * jnp.int32(cat.block_m))
+
+
+def select_engine(ctx: EngineContext, U: Array) -> Engine:
+    """The ``auto`` policy: pick an engine for this query batch.
+
+    Decides from two cheap statistics: batch sparsity ``nnz(u)`` (sparse
+    queries make TA's per-round cost collapse to the active lists) and the
+    catalogue norm spectrum (a decaying spectrum lets the Cauchy-Schwarz
+    scan certify after a few contiguous blocks — the Pallas kernel's best
+    case; a flat spectrum makes it a full scan, so BTA wins).
+    """
+    U = jnp.atleast_2d(U)
+    nnz_frac = float(jnp.mean((U != 0).astype(jnp.float32)))
+    if nnz_frac < 0.25:
+        return get_engine("ta")
+    if ctx.norm_decay < 0.5:
+        return get_engine(
+            "pallas" if jax.default_backend() == "tpu" else "norm")
+    return get_engine("bta")
+
+
+def _auto_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    return select_engine(ctx, U).run(ctx, U, k)
+
+
+register_engine(Engine(
+    name="naive", run=_naive_run, exact=True, needs_index=False,
+    supports_batch=True, backend="jax",
+    description="full matmul + lax.top_k (strongest wall-clock baseline)"))
+register_engine(Engine(
+    name="ta", run=_ta_run, exact=True, needs_index=True,
+    supports_batch=True, backend="jax",
+    description="Threshold Algorithm rounds (paper Alg. 2; blocked "
+                "strategy at block_size=1)"))
+register_engine(Engine(
+    name="bta", run=_bta_run, exact=True, needs_index=True,
+    supports_batch=True, backend="jax",
+    description="Block Threshold Algorithm (MXU-shaped TA)"))
+register_engine(Engine(
+    name="norm", run=_norm_run, exact=True, needs_index=True,
+    supports_batch=True, backend="jax",
+    description="Cauchy-Schwarz norm-ordered block scan"))
+register_engine(Engine(
+    name="pallas", run=_pallas_run, exact=True, needs_index=True,
+    supports_batch=True, backend="pallas",
+    description="norm-ordered block scan as a Pallas TPU kernel "
+                "(interpret-mode on CPU)"))
+register_engine(Engine(
+    name="auto", run=_auto_run, exact=True, needs_index=True,
+    supports_batch=True, backend="dispatch",
+    description="per-batch pick from nnz(u) + catalogue norm spectrum"))

@@ -34,8 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.driver import _dedup_first_occurrence
 from repro.core.naive import TopKResult
-from repro.core.threshold import _dedup_first_occurrence
 
 Array = jnp.ndarray
 NEG_INF = float("-inf")

@@ -1,0 +1,123 @@
+"""The three built-in scan strategies (DESIGN.md §2).
+
+Each constructor closes over the catalogue index arrays and one query and
+returns a :class:`repro.core.driver.ScanStrategy` for
+:func:`repro.core.driver.pruned_block_scan`:
+
+* :func:`ta_round_strategy` — the paper's Algorithm 2 round structure over
+  the per-query *flipped views* (one list depth per step).
+* :func:`blocked_lists_strategy` — the Block Threshold Algorithm: a depth
+  block of ``B`` entries from all R lists per step, with the sign flip
+  applied on the gather side (``block_size=1`` recovers TA rounds exactly,
+  id-for-id and bound-for-bound).
+* :func:`norm_block_strategy` — contiguous blocks in decreasing-norm order
+  bounded by Cauchy-Schwarz (the layout the Pallas backend consumes).
+
+All three leave ``ScanStrategy.score`` as the default dense gather +
+matvec; a future partial-scoring strategy (paper Alg. 3) plugs in there.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.driver import ScanStrategy
+
+Array = jnp.ndarray
+
+
+def ta_round_strategy(order: Array, t_sorted: Array, u: Array) -> ScanStrategy:
+    """Paper-faithful TA rounds over pre-flipped per-query views.
+
+    Args:
+      order / t_sorted: ``[R, M]`` views from
+        :meth:`repro.core.index.TopKIndex.query_views` — already walking in
+        decreasing ``u_r * t_r`` order for every list.
+      u: ``[R]`` query.
+    """
+    R, M = order.shape
+    active = u != 0  # sparse queries: zero-weight lists are never walked
+
+    def candidates(step):
+        ids = jax.lax.dynamic_slice_in_dim(order, step, 1, axis=1)[:, 0]
+        return ids, active
+
+    def bound(step):
+        # Eq. 3 at the depth just consumed
+        t_at = jax.lax.dynamic_slice_in_dim(t_sorted, step, 1, axis=1)[:, 0]
+        return jnp.sum(u * t_at)
+
+    return ScanStrategy(candidates=candidates, bound=bound, num_steps=M,
+                        track_visited=True)
+
+
+def blocked_lists_strategy(
+    order_desc: Array,
+    t_sorted_desc: Array,
+    u: Array,
+    block_size: int,
+) -> ScanStrategy:
+    """BTA enumeration: ``R * block_size`` candidates per step.
+
+    Negative query weights are handled without materialising per-query
+    flipped lists: depth ``d`` in list ``r`` reads position ``M-1-d`` when
+    ``u_r < 0`` (a gather-side index transform, not a data transform) —
+    which is why this strategy, unlike :func:`ta_round_strategy`, stays
+    O(R*B) memory per query under ``vmap``.
+    """
+    R, M = order_desc.shape
+    neg = u < 0
+    active = u != 0
+    active_rep = jnp.repeat(active, block_size,
+                            total_repeat_length=R * block_size)
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+
+    def candidates(step):
+        d0 = step * block_size
+        cols = jnp.minimum(d0 + offs, M - 1)
+        cols_eff = jnp.where(neg[:, None], M - 1 - cols[None, :],
+                             cols[None, :])
+        ids = jnp.take_along_axis(order_desc, cols_eff, axis=1).reshape(-1)
+        return ids, active_rep
+
+    def bound(step):
+        # bound at the block's last processed depth — valid for every unseen
+        # item because the lists are monotone (Eq. 3 holds at any depth)
+        end = jnp.minimum(step * block_size + block_size - 1, M - 1)
+        end_eff = jnp.where(neg, M - 1 - end, end)
+        t_end = t_sorted_desc[jnp.arange(R), end_eff]
+        return jnp.sum(u * t_end)
+
+    return ScanStrategy(candidates=candidates, bound=bound,
+                        num_steps=-(-M // block_size), track_visited=True)
+
+
+def norm_block_strategy(
+    norm_order: Array,
+    norms_sorted: Array,
+    u: Array,
+    block_size: int,
+) -> ScanStrategy:
+    """Decreasing-norm contiguous blocks with Cauchy-Schwarz bounds.
+
+    Block ``b`` covers items ``norm_order[b*B:(b+1)*B]`` (a contiguous
+    gather); every unseen score is bounded by ``||u|| * norms_sorted[(b+1)*B]``.
+    Items never repeat across blocks, so the driver skips visited tracking.
+    """
+    M = norm_order.shape[0]
+    u_norm = jnp.linalg.norm(u)
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+
+    def candidates(step):
+        d0 = step * block_size
+        rows = jnp.minimum(d0 + offs, M - 1)
+        valid = (d0 + offs) < M
+        return norm_order[rows], valid
+
+    def bound(step):
+        next_start = jnp.minimum((step + 1) * block_size, M - 1)
+        return u_norm * norms_sorted[next_start]
+
+    return ScanStrategy(candidates=candidates, bound=bound,
+                        num_steps=-(-M // block_size), track_visited=False)

@@ -6,8 +6,9 @@ Two implementations with identical semantics:
   numpy. Counts exactly the number of score evaluations (the paper's cost
   metric). Used by the figure/table benchmarks and as the exactness oracle
   in tests.
-* :func:`threshold_topk` — a ``jax.lax.while_loop`` round-synchronous form
-  (one depth per iteration, all R lists popped together, exactly the
+* :func:`threshold_topk` — the :func:`repro.core.driver.pruned_block_scan`
+  driver running the :func:`repro.core.strategies.ta_round_strategy`
+  (one list depth per step, all R lists popped together, exactly the
   pseudo-code's round structure). jit-compatible, vmap-able over queries.
 
 Round semantics follow Algorithm 2 precisely: within round d the R heads at
@@ -25,8 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.driver import _dedup_first_occurrence  # noqa: F401  (re-export)
+from repro.core.driver import pruned_block_scan
 from repro.core.index import TopKIndex
 from repro.core.naive import TopKResult
+from repro.core.strategies import ta_round_strategy
 
 Array = jnp.ndarray
 
@@ -124,29 +128,8 @@ def threshold_topk_np(
 
 
 # ---------------------------------------------------------------------------
-# JAX while_loop implementation (round-synchronous, jit/vmap friendly)
+# JAX implementation: ta_round_strategy over the shared driver
 # ---------------------------------------------------------------------------
-
-
-class _TAState(NamedTuple):
-    d: Array
-    top_vals: Array     # [K]
-    top_ids: Array      # [K]
-    visited: Array      # [M] bool
-    n_scored: Array
-    lower: Array
-    upper: Array
-
-
-def _dedup_first_occurrence(ids: Array, m: int) -> Array:
-    """Boolean mask: True where ids[i] is the first occurrence of that id.
-
-    Scatter-min of positions — O(|ids|) work, O(M) memory, jit-friendly.
-    """
-    n = ids.shape[0]
-    pos = jnp.arange(n, dtype=jnp.int32)
-    first_pos = jnp.full((m,), n, dtype=jnp.int32).at[ids].min(pos)
-    return first_pos[ids] == pos
 
 
 @functools.partial(jax.jit, static_argnames=("k", "max_rounds"))
@@ -158,7 +141,7 @@ def threshold_topk(
     k: int,
     max_rounds: int = -1,
 ) -> TopKResult:
-    """TA as a lax.while_loop. One list depth per iteration.
+    """TA via the unified driver. One list depth per driver step.
 
     Args:
       targets: ``[M, R]``.
@@ -169,53 +152,9 @@ def threshold_topk(
       max_rounds: optional round budget (static); ``-1`` = exact TA,
         ``> 0`` = the *halted* threshold algorithm (paper Section 4.3).
     """
-    M, R = targets.shape
-    k = min(k, M)
-    depth_cap = M if max_rounds < 0 else min(max_rounds, M)
-
-    def cond(s: _TAState):
-        return jnp.logical_and(s.d < depth_cap, s.lower < s.upper)
-
-    active = u != 0  # sparse queries: zero-weight lists are never walked
-
-    def body(s: _TAState):
-        ids = jax.lax.dynamic_slice_in_dim(order, s.d, 1, axis=1)[:, 0]  # [R]
-        t_at_d = jax.lax.dynamic_slice_in_dim(t_sorted, s.d, 1, axis=1)[:, 0]
-        new_upper = jnp.sum(u * t_at_d)
-        # inactive-list entries get sentinel id M so they never shadow an
-        # active occurrence of the same item in the dedup pass
-        ids_eff = jnp.where(active, ids, M)
-        fresh = jnp.logical_and(_dedup_first_occurrence(ids_eff, M + 1),
-                                jnp.logical_and(active, ~s.visited[ids]))
-        scores = targets[ids] @ u                          # [R]
-        masked = jnp.where(fresh, scores, NEG_INF)
-        cand_vals = jnp.concatenate([s.top_vals, masked])
-        cand_ids = jnp.concatenate([s.top_ids, ids])
-        top_vals, pos = jax.lax.top_k(cand_vals, k)
-        top_ids = cand_ids[pos]
-        # only entries popped from ACTIVE lists become visited
-        visited = s.visited.at[ids].max(active)
-        return _TAState(
-            d=s.d + 1,
-            top_vals=top_vals,
-            top_ids=top_ids,
-            visited=visited,
-            n_scored=s.n_scored + jnp.sum(fresh).astype(jnp.int32),
-            lower=top_vals[k - 1],
-            upper=new_upper,
-        )
-
-    init = _TAState(
-        d=jnp.int32(0),
-        top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
-        top_ids=jnp.full((k,), -1, dtype=jnp.int32),
-        visited=jnp.zeros((M,), dtype=bool),
-        n_scored=jnp.int32(0),
-        lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
-        upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
-    )
-    final = jax.lax.while_loop(cond, body, init)
-    return TopKResult(final.top_vals, final.top_ids, final.n_scored, final.d)
+    strategy = ta_round_strategy(order, t_sorted, u)
+    # driver steps ARE rounds for this strategy, so depth needs no remap
+    return pruned_block_scan(targets, u, strategy, k, max_steps=max_rounds)
 
 
 def threshold_topk_from_index(

@@ -15,13 +15,18 @@ import numpy as np
 
 from repro.kernels.embedding_bag import embedding_bag_pallas
 from repro.kernels.fm_interaction import fm_interaction_pallas
-from repro.kernels.topk_mips import topk_mips_pallas
+from repro.kernels.topk_mips import (topk_mips_pallas,
+                                     topk_mips_pallas_batched)
 
 Array = jnp.ndarray
 
 
 class MIPSCatalog:
-    """Norm-ordered, block-padded catalogue for the topk_mips kernel."""
+    """Norm-ordered, block-padded catalogue for the topk_mips kernel.
+
+    ``interpret=None`` (the default on both query paths) autodetects the
+    Pallas execution mode: interpreter off-TPU, compiled on TPU.
+    """
 
     def __init__(self, T, block_m: int = 256):
         T = np.asarray(T, np.float32)
@@ -39,16 +44,33 @@ class MIPSCatalog:
         self.block_max_norm = jnp.asarray(
             np.pad(norms[order], (0, M_pad - M))[::block_m].copy())
 
-    def query(self, u: Array, k: int, interpret: bool = True):
+    def _to_catalogue_ids(self, local_idx: Array) -> Array:
+        return jnp.where(
+            local_idx >= 0,
+            self.order[jnp.clip(local_idx, 0, self.num_real - 1)],
+            -1)
+
+    def query(self, u: Array, k: int, interpret=None):
         """Exact top-K. Returns (values, catalogue ids, stats)."""
         u = jnp.asarray(u, jnp.float32)
         bounds = jnp.linalg.norm(u) * self.block_max_norm
         vals, local_idx, stats = topk_mips_pallas(
-            self.T_sorted, bounds, u, k, self.block_m, interpret=interpret)
-        ids = jnp.where(local_idx >= 0,
-                        self.order[jnp.clip(local_idx, 0, self.num_real - 1)],
-                        -1)
-        return vals, ids, stats
+            self.T_sorted, bounds, u, k, self.block_m, interpret=interpret,
+            num_real=self.num_real)
+        return vals, self._to_catalogue_ids(local_idx), stats
+
+    def query_batch(self, U: Array, k: int, interpret=None):
+        """Exact top-K for a query batch ``U: [B, R]`` in ONE kernel launch.
+
+        Returns (values [B, k], catalogue ids [B, k], stats [B, 2]).
+        """
+        U = jnp.atleast_2d(jnp.asarray(U, jnp.float32))
+        bounds = (jnp.linalg.norm(U, axis=1)[:, None]
+                  * self.block_max_norm[None, :])
+        vals, local_idx, stats = topk_mips_pallas_batched(
+            self.T_sorted, bounds, U, k, self.block_m, interpret=interpret,
+            num_real=self.num_real)
+        return vals, self._to_catalogue_ids(local_idx), stats
 
 
 def embedding_bag(table: Array, ids: Array, mode: str = "sum",

@@ -17,9 +17,19 @@ TPU mapping:
   * the bound test is @pl.when on a scalar — a skipped block costs only
     its (prefetched) DMA, no MXU work.
 
+The batched variant adds the query dimension to the grid —
+``grid = (B, n_blocks)`` with blocks innermost, so each query's scan is
+still sequential (the scratch top-K resets at block 0 of every query) and
+the whole batch is one kernel launch.
+
 Exactness: identical guarantee as core.blocked.norm_pruned_topk (blocks are
 visited in decreasing max-norm order; once the K-th best exceeds the bound
-no later block can contribute).
+no later block can contribute). Rows past ``num_real`` are zero padding
+added by the catalogue wrapper; their scores are masked to -inf so a pad
+row can never displace a real (possibly negative) score from the top-K.
+
+``interpret=None`` autodetects: interpret mode off TPU (CPU CI runs the
+kernel bodies in the Pallas interpreter), compiled on TPU.
 """
 
 from __future__ import annotations
@@ -34,8 +44,27 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def resolve_interpret(interpret):
+    """None -> interpret everywhere except on real TPU backends."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _merge_block(scores, block_start, scratch_vals, scratch_idx,
+                 *, k: int, block_m: int, num_real: int):
+    ids = block_start + jax.lax.iota(jnp.int32, block_m)
+    scores = jnp.where(ids < num_real, scores, NEG_INF)  # mask zero padding
+    cand_vals = jnp.concatenate([scratch_vals[...], scores])
+    cand_idx = jnp.concatenate([scratch_idx[...], ids])
+    top, pos = jax.lax.top_k(cand_vals, k)
+    scratch_vals[...] = top
+    scratch_idx[...] = jnp.take(cand_idx, pos)
+
+
 def _kernel(bound_ref, t_ref, u_ref, vals_ref, idx_ref, stats_ref,
-            scratch_vals, scratch_idx, *, k: int, block_m: int):
+            scratch_vals, scratch_idx, *, k: int, block_m: int,
+            num_real: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -53,12 +82,8 @@ def _kernel(bound_ref, t_ref, u_ref, vals_ref, idx_ref, stats_ref,
         u = u_ref[...]                                     # [R, 1]
         scores = jnp.dot(tile, u,
                          preferred_element_type=jnp.float32)[:, 0]
-        ids = i * block_m + jax.lax.iota(jnp.int32, block_m)
-        cand_vals = jnp.concatenate([scratch_vals[...], scores])
-        cand_idx = jnp.concatenate([scratch_idx[...], ids])
-        top, pos = jax.lax.top_k(cand_vals, k)
-        scratch_vals[...] = top
-        scratch_idx[...] = jnp.take(cand_idx, pos)
+        _merge_block(scores, i * block_m, scratch_vals, scratch_idx,
+                     k=k, block_m=block_m, num_real=num_real)
         stats_ref[0] += block_m                            # scored
         stats_ref[1] += 1                                  # blocks visited
 
@@ -67,18 +92,22 @@ def _kernel(bound_ref, t_ref, u_ref, vals_ref, idx_ref, stats_ref,
 
 
 def topk_mips_pallas(T_sorted, block_bounds, u, k: int,
-                     block_m: int = 256, interpret: bool = True):
+                     block_m: int = 256, interpret=None,
+                     num_real: int = -1):
     """T_sorted: [M, R] decreasing-norm order (M % block_m == 0);
     block_bounds: [n_blocks] = ||u|| * max norm per block; u: [R].
 
     Returns (values [k], local indices [k], stats [2] = (n_scored,
-    blocks_visited)). Validated in interpret mode on CPU; compiled path
-    targets TPU VMEM tiling via the BlockSpecs below.
+    blocks_visited)). ``num_real`` marks the tail of zero-padded rows
+    (default: no padding). Validated in interpret mode on CPU; compiled
+    path targets TPU VMEM tiling via the BlockSpecs below.
     """
     M, R = T_sorted.shape
     assert M % block_m == 0, (M, block_m)
     n_blocks = M // block_m
-    kernel = functools.partial(_kernel, k=k, block_m=block_m)
+    num_real = M if num_real < 0 else num_real
+    kernel = functools.partial(_kernel, k=k, block_m=block_m,
+                               num_real=num_real)
     return pl.pallas_call(
         kernel,
         grid=(n_blocks,),
@@ -101,5 +130,85 @@ def topk_mips_pallas(T_sorted, block_bounds, u, k: int,
             pltpu.VMEM((k,), jnp.float32),
             pltpu.VMEM((k,), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(block_bounds, T_sorted, u[:, None])
+
+
+def _kernel_batched(bound_ref, t_ref, u_ref, vals_ref, idx_ref, stats_ref,
+                    scratch_vals, scratch_idx, *, k: int, block_m: int,
+                    num_real: int):
+    j = pl.program_id(1)  # block index — innermost, sequential per query
+
+    @pl.when(j == 0)
+    def _init():
+        # a new query's scan begins: reset the carried top-K
+        scratch_vals[...] = jnp.full_like(scratch_vals, NEG_INF)
+        scratch_idx[...] = jnp.full_like(scratch_idx, -1)
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    lb = scratch_vals[k - 1]
+    bound = bound_ref[0, 0]
+
+    @pl.when(bound > lb)
+    def _score():
+        tile = t_ref[...]                                  # [block_m, R]
+        u = u_ref[0]                                       # [R, 1]
+        scores = jnp.dot(tile, u,
+                         preferred_element_type=jnp.float32)[:, 0]
+        _merge_block(scores, j * block_m, scratch_vals, scratch_idx,
+                     k=k, block_m=block_m, num_real=num_real)
+        stats_ref[0, 0] += block_m                         # scored
+        stats_ref[0, 1] += 1                               # blocks visited
+
+    vals_ref[0, :] = scratch_vals[...]
+    idx_ref[0, :] = scratch_idx[...]
+
+
+def topk_mips_pallas_batched(T_sorted, block_bounds, U, k: int,
+                             block_m: int = 256, interpret=None,
+                             num_real: int = -1):
+    """Query-grid variant: one launch scans the catalogue for a whole batch.
+
+    T_sorted: [M, R] decreasing-norm order (M % block_m == 0);
+    block_bounds: [B, n_blocks] per-query Cauchy-Schwarz block bounds;
+    U: [B, R] queries.
+
+    Returns (values [B, k], local indices [B, k], stats [B, 2]). The grid
+    is (B, n_blocks) with the block dimension innermost, so the VMEM
+    scratch top-K carries across a query's blocks and resets when the grid
+    advances to the next query. The catalogue tile DMA pattern is identical
+    to the single-query kernel; only the tiny u / bound operands change per
+    grid row.
+    """
+    M, R = T_sorted.shape
+    B = U.shape[0]
+    assert M % block_m == 0, (M, block_m)
+    assert block_bounds.shape == (B, M // block_m), block_bounds.shape
+    n_blocks = M // block_m
+    num_real = M if num_real < 0 else num_real
+    kernel = functools.partial(_kernel_batched, k=k, block_m=block_m,
+                               num_real=num_real)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, j)),             # bound
+            pl.BlockSpec((block_m, R), lambda b, j: (j, 0)),       # T tile
+            pl.BlockSpec((1, R, 1), lambda b, j: (b, 0, 0)),       # u
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, k), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, j: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+            jax.ShapeDtypeStruct((B, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((k,), jnp.int32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(block_bounds, T_sorted, U[:, :, None])

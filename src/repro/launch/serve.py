@@ -3,8 +3,8 @@
 ``python -m repro.launch.serve --targets 50000 --rank 50 --k 10 -n 200``
 builds a catalogue, indexes it, and serves batched queries through the
 selected engine, printing the paper's efficiency metric (scores/query)
-next to wall time. ``--engine sharded`` demonstrates the multi-device
-merge on however many devices the process sees.
+next to wall time. ``--engine all`` sweeps every exact engine in the
+registry (``repro.core.engines``); any registry name or alias is accepted.
 """
 
 from __future__ import annotations
@@ -22,7 +22,8 @@ def main():
     ap.add_argument("-n", "--num-queries", type=int, default=100)
     ap.add_argument("--batch", type=int, default=25)
     ap.add_argument("--engine", default="bta",
-                    choices=["naive", "bta", "norm", "all"])
+                    help="registry engine name/alias, or 'all' to sweep "
+                         "every exact engine")
     ap.add_argument("--distribution", default="lowrank_spectrum",
                     choices=["normal", "lognormal", "lowrank_spectrum"])
     ap.add_argument("--block-size", type=int, default=256)
@@ -32,6 +33,7 @@ def main():
     import jax.numpy as jnp
 
     from repro.core import random_model
+    from repro.core.engines import get_engine, list_engines
     from repro.serving.server import TopKServer
 
     rng = np.random.default_rng(args.seed)
@@ -44,7 +46,14 @@ def main():
     U = jnp.asarray(rng.standard_normal(
         (args.num_queries, args.rank)).astype(np.float32) * spectrum)
 
-    engines = ["naive", "bta", "norm"] if args.engine == "all" else [args.engine]
+    if args.engine == "all":
+        engines = [e.name for e in list_engines(exact=True)
+                   if e.name != "auto"]
+        # naive first: it is the ground-truth reference the others are
+        # asserted against
+        engines.sort(key=lambda n: n != "naive")
+    else:
+        engines = [get_engine(args.engine).name]
     ref = None
     for eng in engines:
         res = srv.query(U, args.k, method=eng)

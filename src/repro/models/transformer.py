@@ -30,6 +30,7 @@ from repro.models.attention import apply_rope, blocked_attention, decode_attenti
 from repro.models.common import (
     ACTIVATIONS,
     MeshRules,
+    current_abstract_mesh,
     dense_init,
     embed_init,
     rms_norm,
@@ -67,7 +68,7 @@ class TransformerConfig:
     logit_chunk: int = 512
     kv_block: int = 512
     # roofline-calibration mode: unroll every scan so cost_analysis counts
-    # loop bodies exactly (XLA counts a while body ONCE; see DESIGN.md §8)
+    # loop bodies exactly (XLA counts a while body ONCE; see DESIGN.md §6)
     unroll: bool = False
 
     @property
@@ -140,7 +141,7 @@ def _div(n: int, mesh_axis: Optional[str]) -> bool:
     """True if dim n is divisible by the ambient mesh axis size."""
     if mesh_axis is None:
         return False
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     if mesh is None or mesh.empty or mesh_axis not in mesh.axis_names:
         return False
     return n % dict(mesh.shape)[mesh_axis] == 0
@@ -215,7 +216,7 @@ def _attention_block(lp: Dict, x: Array, config: TransformerConfig,
         # scores stay sharded exactly like the cache's seq axis
         cache_spec = kv_cache_specs(config, rules, B, k_cache.shape[1])["k"]
         score_spec = P(cache_spec[1], None, None, cache_spec[2])
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_abstract_mesh()
 
         def seq_shard(s):
             if mesh is None or mesh.empty:
@@ -397,7 +398,7 @@ def kv_cache_specs(config: TransformerConfig, rules: MeshRules,
     parallelism (data x model) instead of 16-way, cutting both the
     per-device cache slice and the per-token attention reads 16x.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     dp = None
     sp = None
     if mesh is not None and not mesh.empty:
@@ -461,7 +462,7 @@ def topk_logits(hidden: Array, unembed: Array, k: int,
     ``repro.core.sharded``: local matmul + local top-K, all-gather only
     ``K`` candidates per shard. Without a mesh it degrades to naive.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     tp = rules.tp
     if mesh is None or mesh.empty or tp not in mesh.axis_names \
             or unembed.shape[1] % dict(mesh.shape)[tp] != 0:

@@ -1,10 +1,15 @@
 """Top-K query serving: the paper's inference engine as a service layer.
 
-``TopKServer`` owns a SEP-LR catalogue + its sorted-list index and serves
-batched queries through any of the exact engines (naive / TA / BTA /
-norm-pruned / sharded). Requests are micro-batched; per-query pruning
-statistics (scores computed, depth) are aggregated for the benchmark
-harness — matching the paper's evaluation axis (query efficiency).
+``TopKServer`` owns a SEP-LR catalogue plus a shared
+:class:`repro.core.engines.EngineContext` and serves batched queries
+through ANY engine in the registry (``naive`` / ``ta`` / ``bta`` /
+``norm`` / ``pallas`` / ``auto`` — see ``repro.core.engines``), addressed
+by registry name. Requests are micro-batched; per-query pruning statistics
+(scores computed, depth) are aggregated PER REGISTRY ENGINE for the
+benchmark harness — matching the paper's evaluation axis (query
+efficiency). ``method="auto"`` resolves per batch via
+:func:`repro.core.engines.select_engine`, and its traffic is accounted to
+the engine that actually ran.
 
 ``TwoStageRanker`` is the production recsys pattern from DESIGN.md §3:
 exact SEP-LR top-N retrieval (where the paper's algorithms apply) followed
@@ -15,19 +20,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    SepLRModel,
-    TopKIndex,
-    blocked_topk_batched,
-    build_index,
-    naive_topk,
-    norm_pruned_topk,
+from repro.core import SepLRModel, TopKIndex
+from repro.core.engines import (
+    Engine,
+    EngineContext,
+    engine_names,
+    get_engine,
+    select_engine,
 )
 
 Array = jnp.ndarray
@@ -53,10 +58,19 @@ class TopKServer:
     def __init__(self, model: SepLRModel, max_batch: int = 64,
                  block_size: int = 256):
         self.model = model
-        self.index: TopKIndex = build_index(model.targets)
+        self.ctx = EngineContext(model.targets, block_size=block_size)
         self.max_batch = max_batch
         self.block_size = block_size
         self.stats: Dict[str, ServeStats] = {}
+
+    @property
+    def index(self) -> TopKIndex:
+        return self.ctx.index
+
+    @staticmethod
+    def available_engines() -> List[str]:
+        """Registry names accepted by :meth:`query`'s ``method=``."""
+        return engine_names()
 
     def _record(self, method: str, res, dt: float, n: int):
         s = self.stats.setdefault(method, ServeStats())
@@ -66,31 +80,26 @@ class TopKServer:
         s.total_time_s += dt
 
     def query(self, U: Array, k: int, method: str = "bta"):
-        """U: [B, R] (or [R]). Returns TopKResult batched like U."""
+        """U: [B, R] (or [R]). Returns TopKResult batched like U.
+
+        ``method`` is any registry name (or alias) from
+        :meth:`available_engines`; unknown names raise ``ValueError``.
+        """
         U = jnp.atleast_2d(U)
+        engine: Engine = get_engine(method)
         outs = []
-        t0 = time.perf_counter()
         for i in range(0, U.shape[0], self.max_batch):
             chunk = U[i: i + self.max_batch]
-            if method == "naive":
-                res = naive_topk(self.model.targets, chunk, k)
-            elif method == "bta":
-                res = blocked_topk_batched(self.model.targets, self.index,
-                                           chunk, k, self.block_size)
-            elif method == "norm":
-                res = jax.vmap(
-                    lambda u: norm_pruned_topk(
-                        self.model.targets, self.index.norm_order,
-                        self.index.norms_sorted, u, k, self.block_size)
-                )(chunk)
-            else:
-                raise ValueError(method)
-            outs.append(jax.tree_util.tree_map(np.asarray, res))
-        dt = time.perf_counter() - t0
-        res = jax.tree_util.tree_map(
+            eng = (select_engine(self.ctx, chunk)
+                   if engine.name == "auto" else engine)
+            t0 = time.perf_counter()
+            res = jax.tree_util.tree_map(
+                np.asarray, eng.run(self.ctx, chunk, k))
+            dt = time.perf_counter() - t0
+            self._record(eng.name, res, dt, chunk.shape[0])
+            outs.append(res)
+        return jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *outs)
-        self._record(method, res, dt, U.shape[0])
-        return res
 
 
 class TwoStageRanker:
@@ -98,6 +107,8 @@ class TwoStageRanker:
 
     retrieval_model: SEP-LR over the candidate catalogue (u = query tower).
     rerank_fn(query_batch, candidate_ids) -> scores of the retrieved set.
+    The retrieval engine is addressed by registry name, same as
+    :meth:`TopKServer.query`.
     """
 
     def __init__(self, retrieval: TopKServer,
@@ -109,6 +120,7 @@ class TwoStageRanker:
 
     def rank(self, query_batch: Dict, U: Array, k: int,
              method: str = "bta"):
+        get_engine(method)  # fail fast on unknown engine names
         res = self.retrieval.query(U, self.retrieve_n, method=method)
         cand = np.asarray(res.indices)                       # [B, N]
         rerank = self.rerank_fn(query_batch, cand)           # [B, N]

@@ -1,0 +1,76 @@
+"""Property-based exactness tests (hypothesis).
+
+This module is skipped in its entirety when hypothesis is not installed
+(the deterministic equivalents in ``test_core_exact.py`` and the registry
+sweep in ``test_engines.py`` still run everywhere).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    blocked_topk,
+    naive_topk,
+    norm_pruned_topk,
+    threshold_topk_from_index,
+    threshold_topk_np,
+)
+from repro.core.index import build_index
+
+
+def _problem(draw):
+    m = draw(st.integers(5, 120))
+    r = draw(st.integers(2, 16))
+    k = draw(st.integers(1, min(m, 8)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    sparse = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    u = rng.standard_normal(r).astype(np.float32)
+    if sparse:
+        u[rng.random(r) < 0.5] = 0.0
+        if np.all(u == 0):
+            u[0] = 1.0
+    return T, u, k
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_ta_equals_naive(data):
+    T, u, k = _problem(data.draw)
+    nv = np.sort(np.asarray(naive_topk(jnp.asarray(T), jnp.asarray(u), k).values))
+    idx = build_index(T)
+    tv, _, ts = threshold_topk_np(T, np.asarray(idx.order_desc), u, k)
+    np.testing.assert_allclose(np.sort(tv), nv, atol=1e-4)
+    jr = threshold_topk_from_index(jnp.asarray(T), idx, jnp.asarray(u), k)
+    np.testing.assert_allclose(np.sort(np.asarray(jr.values)), nv, atol=1e-4)
+    # the JAX TA is count-faithful to the oracle
+    assert int(jr.n_scored) == ts.n_scored
+    assert int(jr.depth) == ts.depth
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data(), block=st.sampled_from([1, 3, 8, 32]))
+def test_bta_exact_any_block_size(data, block):
+    T, u, k = _problem(data.draw)
+    nv = np.sort(np.asarray(naive_topk(jnp.asarray(T), jnp.asarray(u), k).values))
+    idx = build_index(T)
+    r = blocked_topk(jnp.asarray(T), idx.order_desc, idx.t_sorted_desc,
+                     jnp.asarray(u), k, block_size=block)
+    np.testing.assert_allclose(np.sort(np.asarray(r.values)), nv, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_norm_pruned_exact(data):
+    T, u, k = _problem(data.draw)
+    nv = np.sort(np.asarray(naive_topk(jnp.asarray(T), jnp.asarray(u), k).values))
+    idx = build_index(T)
+    r = norm_pruned_topk(jnp.asarray(T), idx.norm_order, idx.norms_sorted,
+                         jnp.asarray(u), k, block_size=16)
+    np.testing.assert_allclose(np.sort(np.asarray(r.values)), nv, atol=1e-4)

@@ -1,0 +1,209 @@
+"""Engine-layer tests: the registry, the unified driver, and the strategies.
+
+The acceptance sweep runs EVERY registered exact engine (including the
+Pallas backend in interpret mode) against ``naive_topk`` on random,
+sparse, and negative-weight queries — new engines registered later are
+covered automatically.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineContext,
+    blocked_topk,
+    engine_names,
+    get_engine,
+    list_engines,
+    naive_topk,
+    norm_pruned_topk,
+    pruned_block_scan,
+    select_engine,
+    ta_round_strategy,
+    threshold_topk_np,
+)
+from repro.core.index import build_index
+from repro.core.strategies import blocked_lists_strategy, norm_block_strategy
+
+
+def _queries(rng, b, r):
+    """Random, sparse (mostly-zero), and mixed-sign/negative queries."""
+    dense = rng.standard_normal((b, r)).astype(np.float32)
+    sparse = dense.copy()
+    sparse[rng.random((b, r)) < 0.7] = 0.0
+    sparse[np.all(sparse == 0, axis=1), 0] = 1.0
+    mixed = dense.copy()
+    mixed[:, ::2] *= -1.0
+    negative = -np.abs(dense)
+    return {"random": dense, "sparse": sparse, "mixed_sign": mixed,
+            "negative": negative}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents_and_metadata():
+    names = engine_names()
+    for expected in ("naive", "ta", "bta", "norm", "pallas", "auto"):
+        assert expected in names
+    assert not get_engine("naive").needs_index
+    assert get_engine("pallas").backend == "pallas"
+    # aliases resolve to canonical engines
+    assert get_engine("threshold").name == "ta"
+    assert get_engine("blocked").name == "bta"
+    assert get_engine("norm_pruned").name == "norm"
+    assert get_engine("topk_mips").name == "pallas"
+
+
+def test_registry_unknown_engine_raises():
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_engine("definitely_not_an_engine")
+
+
+def test_list_engines_filters():
+    assert all(e.exact for e in list_engines(exact=True))
+    pallas = list_engines(backend="pallas")
+    assert [e.name for e in pallas] == ["pallas"]
+    assert all(not e.needs_index for e in list_engines(needs_index=False))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance sweep: every exact engine vs naive on all query regimes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,r,k", [(37, 8, 5), (256, 16, 1), (300, 12, 10)])
+def test_every_exact_engine_matches_naive(m, r, k):
+    rng = np.random.default_rng(m * r + k)
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    ctx = EngineContext(T, block_size=16)
+    for regime, U in _queries(rng, 4, r).items():
+        Uj = jnp.asarray(U)
+        ref = np.sort(np.asarray(naive_topk(ctx.targets, Uj, k).values),
+                      axis=1)
+        for eng in list_engines(exact=True):
+            res = eng.run(ctx, Uj, k)
+            np.testing.assert_allclose(
+                np.sort(np.asarray(res.values), axis=1), ref, atol=1e-3,
+                err_msg=f"engine={eng.name} regime={regime}")
+
+
+def test_engine_ids_are_valid_catalogue_ids():
+    rng = np.random.default_rng(11)
+    T = rng.standard_normal((123, 9)).astype(np.float32)
+    ctx = EngineContext(T, block_size=16)
+    U = jnp.asarray(rng.standard_normal((3, 9)).astype(np.float32))
+    for eng in list_engines(exact=True):
+        res = eng.run(ctx, U, 5)
+        ids = np.asarray(res.indices)
+        vals = np.asarray(res.values)
+        scores = np.asarray(U) @ T.T
+        for b in range(ids.shape[0]):
+            np.testing.assert_allclose(scores[b, ids[b]], vals[b], atol=1e-3,
+                                       err_msg=eng.name)
+
+
+# ---------------------------------------------------------------------------
+# auto policy
+# ---------------------------------------------------------------------------
+
+
+def test_auto_selects_ta_for_sparse_batches():
+    rng = np.random.default_rng(0)
+    ctx = EngineContext(rng.standard_normal((500, 24)).astype(np.float32))
+    U = np.zeros((4, 24), np.float32)
+    U[:, :3] = 1.0
+    assert select_engine(ctx, jnp.asarray(U)).name == "ta"
+
+
+def test_auto_selects_norm_backend_for_decaying_catalogues():
+    rng = np.random.default_rng(1)
+    T = rng.standard_normal((2000, 16)).astype(np.float32)
+    T *= (1.0 / np.sqrt(1.0 + np.arange(2000)))[:, None]
+    ctx = EngineContext(T)
+    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    assert select_engine(ctx, U).name in ("norm", "pallas")
+
+
+def test_auto_selects_bta_for_dense_flat_catalogues():
+    rng = np.random.default_rng(2)
+    ctx = EngineContext(rng.standard_normal((1000, 16)).astype(np.float32))
+    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    assert select_engine(ctx, U).name == "bta"
+
+
+# ---------------------------------------------------------------------------
+# Blocked path: mixed-sign and mostly-zero queries vs the numpy oracle
+# (the gather-side list flip previously had no direct coverage)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block", [1, 7, 32])
+@pytest.mark.parametrize("regime", ["mixed_sign", "sparse", "negative"])
+def test_blocked_flip_and_sparse_match_oracle(block, regime):
+    rng = np.random.default_rng(17)
+    T = rng.standard_normal((150, 10)).astype(np.float32)
+    idx = build_index(T)
+    for u in _queries(rng, 3, 10)[regime]:
+        ov, _, ostats = threshold_topk_np(T, np.asarray(idx.order_desc), u, 4)
+        r = blocked_topk(jnp.asarray(T), idx.order_desc, idx.t_sorted_desc,
+                         jnp.asarray(u), 4, block_size=block)
+        np.testing.assert_allclose(np.sort(np.asarray(r.values)),
+                                   np.sort(ov), atol=1e-4)
+        if block == 1:
+            # block_size=1 IS the paper's TA round structure, count-for-count
+            assert int(r.n_scored) == ostats.n_scored
+            assert int(r.depth) == ostats.depth
+
+
+def test_driver_direct_strategies_agree():
+    """The three strategies, run straight through pruned_block_scan."""
+    rng = np.random.default_rng(23)
+    T = rng.standard_normal((90, 7)).astype(np.float32)
+    u = rng.standard_normal(7).astype(np.float32)
+    u[2] = 0.0
+    u[3] *= -1.0
+    idx = build_index(T)
+    Tj, uj = jnp.asarray(T), jnp.asarray(u)
+    ref = np.sort(np.asarray(naive_topk(Tj, uj, 5).values))
+    order, t_sorted = idx.query_views(uj)
+    for strat in (
+        ta_round_strategy(order, t_sorted, uj),
+        blocked_lists_strategy(idx.order_desc, idx.t_sorted_desc, uj, 8),
+        norm_block_strategy(idx.norm_order, idx.norms_sorted, uj, 8),
+    ):
+        res = pruned_block_scan(Tj, uj, strat, 5)
+        np.testing.assert_allclose(np.sort(np.asarray(res.values)), ref,
+                                   atol=1e-4)
+
+
+def test_driver_uniform_halting():
+    """max_steps caps every strategy through the same driver argument."""
+    rng = np.random.default_rng(29)
+    T = rng.standard_normal((400, 12)).astype(np.float32)
+    u = rng.standard_normal(12).astype(np.float32)
+    idx = build_index(T)
+    Tj, uj = jnp.asarray(T), jnp.asarray(u)
+    order, t_sorted = idx.query_views(uj)
+    for strat in (
+        ta_round_strategy(order, t_sorted, uj),
+        blocked_lists_strategy(idx.order_desc, idx.t_sorted_desc, uj, 16),
+        norm_block_strategy(idx.norm_order, idx.norms_sorted, uj, 16),
+    ):
+        res = pruned_block_scan(Tj, uj, strat, 5, max_steps=3)
+        assert int(res.depth) <= 3
+
+
+def test_pallas_engine_counts_are_block_granular():
+    rng = np.random.default_rng(31)
+    T = rng.standard_normal((512, 16)).astype(np.float32)
+    T *= (1.0 / (1.0 + np.arange(512)))[:, None] ** 0.5
+    ctx = EngineContext(T, block_size=64)
+    U = jnp.asarray(rng.standard_normal((3, 16)).astype(np.float32))
+    res = get_engine("pallas").run(ctx, U, 5)
+    n = np.asarray(res.n_scored)
+    assert np.all(n % 64 == 0)
+    assert np.all(n < 512)          # the decaying catalogue prunes blocks

@@ -7,7 +7,13 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+pytestmark = pytest.mark.skipif(
+    not (hasattr(jax, "set_mesh") and hasattr(jax.sharding, "AxisType")),
+    reason="needs the explicit-mesh APIs (jax.set_mesh / sharding.AxisType) "
+           "of newer jax; this interpreter's jax predates them")
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -118,8 +118,11 @@ class TestFaultTolerance:
                               total_steps=60)
         tr = Trainer(_loss, params, opt, _loader(64),
                      TrainerConfig(total_steps=60, log_every=5))
-        final = tr.run()
-        assert tr.history[0]["loss"] > final["loss"]
+        tr.run()
+        # per-step losses are single-batch samples; compare early/late
+        # windows so one noisy batch can't flip the verdict
+        losses = [h["loss"] for h in tr.history]
+        assert np.mean(losses[:3]) > np.mean(losses[-3:])
 
 
 class TestCompression:
