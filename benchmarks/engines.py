@@ -1,10 +1,21 @@
-"""Registry sweep — every registered engine on one catalogue.
+"""Registry sweep — every registered engine over an M-sweep catalogue.
 
 The benchmark equivalent of ``TopKServer.available_engines()``: whatever
 is in ``repro.core.engines`` gets measured (wall time + the paper's
 score-count metric) and, when it advertises ``exact``, checked against
 the naive scan. A newly registered engine shows up here with zero harness
 changes — the point of the registry layer (DESIGN.md §1).
+
+Measurement protocol (DESIGN.md §6): engines run through the registry's
+compiled-executable cache (``EngineContext.warmup`` first, so the numbers
+are steady-state serving latency, not trace+compile time), and
+``us_per_query`` is the MINIMUM over ``iters`` timed batches — the
+shared-host-noise-robust estimator; the median is recorded alongside.
+Each row also records ``speedup_vs_naive`` (same M, same batch) and
+``interpret_mode`` — Pallas rows measured off-TPU run in the Pallas
+interpreter, which is orders of magnitude slower than both compiled TPU
+execution and the XLA engines, and must never be read as a hardware
+result.
 """
 import time
 
@@ -12,57 +23,102 @@ import numpy as np
 
 from benchmarks.common import csv_line, save_rows
 
+QUICK_SWEEP = (8000,)
+FULL_SWEEP = (8000, 32768, 131072, 262144)
 
-def run(quick: bool = True):
+
+def _catalogue(rng, m: int, r: int) -> np.ndarray:
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    T *= (1.0 / np.sqrt(1.0 + np.arange(m, dtype=np.float32)))[:, None]
+    return T
+
+
+def _timed(run, U, iters: int, budget_s: float = 2.0):
+    import jax
+
+    def once():
+        t0 = time.perf_counter()
+        res = run(U)
+        jax.tree_util.tree_map(
+            lambda a: a.block_until_ready()
+            if hasattr(a, "block_until_ready") else a, res)
+        return res, time.perf_counter() - t0
+
+    run(U)                       # ensure compiled
+    _, est = once()              # warm estimate sizes the loop: slow calls
+    iters = max(3, min(iters, int(budget_s / max(est, 1e-9))))
+    ts = []
+    for _ in range(iters):
+        res, dt = once()
+        ts.append(dt)
+    return res, float(np.min(ts)), float(np.median(ts))
+
+
+def run(quick: bool = True, iters: int = 30, save_as: str = "engines"):
+    import jax
     import jax.numpy as jnp
 
     from repro.core import naive_topk
     from repro.core.engines import EngineContext, list_engines, select_engine
+    from repro.kernels.topk_mips import resolve_interpret
 
     rng = np.random.default_rng(7)
-    M = 8000 if quick else 50000
     R, K, B = 32, 10, 8
-    T = rng.standard_normal((M, R)).astype(np.float32)
-    T *= (1.0 / np.sqrt(1.0 + np.arange(M, dtype=np.float32)))[:, None]
-    ctx = EngineContext(T, block_size=256)
-    U = jnp.asarray(rng.standard_normal((B, R)).astype(np.float32))
-    ref = np.sort(np.asarray(naive_topk(ctx.targets, U, K).values), axis=1)
-
     rows = []
-    for eng in list_engines():
-        run_as = select_engine(ctx, U) if eng.name == "auto" else eng
-        res = run_as.run(ctx, U, K)          # warm the jit cache
-        t0 = time.perf_counter()
-        res = run_as.run(ctx, U, K)
-        np.asarray(res.values)
-        dt = time.perf_counter() - t0
-        exact_ok = bool(np.allclose(
-            np.sort(np.asarray(res.values), axis=1), ref, atol=1e-3))
-        rows.append({
-            "engine": eng.name,
-            "resolved": run_as.name,
-            "backend": eng.backend,
-            "exact": eng.exact,
-            "exact_verified": exact_ok,
-            "needs_index": eng.needs_index,
-            "M": M, "R": R, "K": K, "batch": B,
-            "avg_scores": float(np.mean(np.asarray(res.n_scored))),
-            "us_per_query": dt / B * 1e6,
-        })
-    save_rows("engines", rows)
+    for M in (QUICK_SWEEP if quick else FULL_SWEEP):
+        T = _catalogue(rng, M, R)
+        ctx = EngineContext(T, block_size=256)
+        U = jnp.asarray(rng.standard_normal((B, R)).astype(np.float32))
+        ref = np.sort(np.asarray(naive_topk(ctx.targets, U, K).values),
+                      axis=1)
+        ctx.warmup(K, batch_sizes=(B,))
+        naive_us = None
+        for eng in list_engines():
+            run_as = select_engine(ctx, U) if eng.name == "auto" else eng
+            res, t_min, t_med = _timed(
+                lambda q, e=run_as: e.run(ctx, q, K), U, iters)
+            exact_ok = bool(np.allclose(
+                np.sort(np.asarray(res.values), axis=1), ref, atol=1e-3))
+            us = t_min / B * 1e6
+            if eng.name == "naive":
+                naive_us = us
+            rows.append({
+                "engine": eng.name,
+                "resolved": run_as.name,
+                "backend": eng.backend,
+                "exact": eng.exact,
+                "exact_verified": exact_ok,
+                "needs_index": eng.needs_index,
+                "interpret_mode": (bool(resolve_interpret(ctx.interpret))
+                                   if run_as.backend == "pallas" else False),
+                "M": M, "R": R, "K": K, "batch": B,
+                "avg_scores": float(np.mean(np.asarray(res.n_scored))),
+                "us_per_query": us,
+                "us_per_query_median": t_med / B * 1e6,
+                "speedup_vs_naive": None,   # filled below
+            })
+        assert naive_us is not None
+        for r_ in rows:
+            if r_["M"] == M:
+                r_["speedup_vs_naive"] = naive_us / r_["us_per_query"]
+    save_rows(save_as, rows)
     return rows
 
 
 def main(quick: bool = True):
     rows = run(quick)
     bad = [r["engine"] for r in rows if r["exact"] and not r["exact_verified"]]
+    m0 = rows[0]["M"]
     derived = ";".join(
-        f"{r['engine']}={r['avg_scores']:.0f}sc" for r in rows)
+        f"{r['engine']}={r['avg_scores']:.0f}sc,{r['speedup_vs_naive']:.2f}x"
+        for r in rows if r["M"] == m0)
     derived += f";exact_failures={bad or 'none'}"
-    fastest = min(rows, key=lambda r: r["us_per_query"])
+    fastest = min((r for r in rows if r["M"] == m0),
+                  key=lambda r: r["us_per_query"])
     print(csv_line("engines", fastest["us_per_query"], derived))
     assert not bad, f"exact engines diverged from naive: {bad}"
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(quick="--full" not in sys.argv)

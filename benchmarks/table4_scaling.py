@@ -30,6 +30,9 @@ def run(quick: bool = True):
         U = rng.standard_normal((n_queries, R)).astype(np.float32) * spectrum
         ctx = EngineContext(T)
         ctx.index  # build offline, outside the timed window
+        # compile offline too (DESIGN.md §6): us_per_query is steady-state
+        # serving latency, not the one-off trace+compile cost
+        ctx.warmup(1, batch_sizes=(n_queries,), engines=["ta"])
         t0 = time.perf_counter()
         avg_scores, _ = engine_counts(T, U, 1, engine="ta", ctx=ctx)
         dt = (time.perf_counter() - t0) / n_queries

@@ -17,11 +17,23 @@ Engine layer (DESIGN.md):
   engine_names, select_engine     — the name-keyed engine registry
 """
 
-from repro.core.blocked import blocked_topk, blocked_topk_batched, norm_pruned_topk
-from repro.core.driver import ScanState, ScanStrategy, pruned_block_scan
+from repro.core.blocked import (
+    blocked_topk,
+    blocked_topk_batched,
+    chunked_ta_topk,
+    chunked_ta_topk_batched,
+    norm_pruned_topk,
+)
+from repro.core.driver import (
+    ScanState,
+    ScanStrategy,
+    merge_topk_sorted,
+    pruned_block_scan,
+)
 from repro.core.engines import (
     Engine,
     EngineContext,
+    batch_bucket,
     engine_names,
     get_engine,
     list_engines,
@@ -64,14 +76,15 @@ __all__ = [
     "PartialTAStats", "build_index", "naive_topk", "threshold_topk",
     "threshold_topk_from_index", "threshold_topk_np", "fagin_topk_np",
     "partial_threshold_topk_np", "blocked_topk", "blocked_topk_batched",
+    "chunked_ta_topk", "chunked_ta_topk_batched",
     "norm_pruned_topk", "sharded_naive_topk", "sharded_blocked_topk",
     "hierarchical_merge_topk", "from_cosine_similarity",
     "from_matrix_factorization", "from_linear_multilabel",
     "from_pairwise_kronecker", "kronecker_query", "normalize_query",
     "random_model",
     # engine layer
-    "ScanState", "ScanStrategy", "pruned_block_scan",
+    "ScanState", "ScanStrategy", "pruned_block_scan", "merge_topk_sorted",
     "ta_round_strategy", "blocked_lists_strategy", "norm_block_strategy",
     "Engine", "EngineContext", "register_engine", "get_engine",
-    "list_engines", "engine_names", "select_engine",
+    "list_engines", "engine_names", "select_engine", "batch_bucket",
 ]

@@ -7,11 +7,18 @@ BTA restructures the same exact algorithm around the MXU:
 * one round pops a **depth block** of ``B`` entries from all R lists at once
   (``R*B`` candidate ids),
 * the candidates are scored as a single gather + matvec/matmul,
-* the running top-K is merged with one ``lax.top_k`` over ``K + R*B``,
+* the running top-K is merged block-locally and folded into the carry with
+  an O(K) sorted merge (:func:`repro.core.driver.merge_topk_sorted`),
 * the stopping bound is evaluated at the block's LAST depth — still a valid
   upper bound for every unseen item because the lists are monotone (Eq. 3
   holds at any depth), so **exactness is preserved**; at most one extra
   block of items is scored compared to item-at-a-time TA.
+
+``chunked_ta_topk`` keeps the paper's item-at-a-time *accounting* while
+executing block-shaped work: a chunk of ``chunk`` rounds is gathered and
+scored at once, then the driver's per-candidate prefix masking replays the
+rounds sequentially so ``n_scored``/``depth`` equal the sequential
+algorithm's exactly (the `ta` registry engine runs on this path).
 
 Also here: ``norm_pruned_topk`` — a beyond-paper exact pruner that walks the
 catalogue in decreasing ``||t(y)||`` order and bounds whole *contiguous*
@@ -19,7 +26,7 @@ blocks with Cauchy-Schwarz ``s(x,y) <= ||u|| * max_norm(block)`` (LEMP-style
 screening, but block-synchronous for the MXU; gathers are contiguous, which
 the Pallas kernel exploits).
 
-Both are thin wrappers: the loop itself is
+All are thin wrappers: the loop itself is
 :func:`repro.core.driver.pruned_block_scan` running
 :func:`repro.core.strategies.blocked_lists_strategy` /
 :func:`repro.core.strategies.norm_block_strategy`. ``block_size=1``
@@ -30,11 +37,12 @@ variant across every strategy.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import pruned_block_scan
+from repro.core.driver import merge_topk_sorted, pruned_block_scan
 from repro.core.index import TopKIndex
 from repro.core.naive import TopKResult
 from repro.core.strategies import blocked_lists_strategy, norm_block_strategy
@@ -51,6 +59,7 @@ def blocked_topk(
     k: int,
     block_size: int = 256,
     max_blocks: int = -1,
+    rank_desc: Optional[Array] = None,
 ) -> TopKResult:
     """Exact top-K via the Block Threshold Algorithm (single query).
 
@@ -63,9 +72,14 @@ def blocked_topk(
       block_size: list depth consumed per round (static). ``block_size=1``
         degenerates to the paper's TA round structure.
       max_blocks: optional round budget — the halted variant.
+      rank_desc: optional inverse permutations
+        (:attr:`repro.core.index.TopKIndex.rank_desc`); when given, dedup
+        runs on cursor arithmetic and the O(M) visited bitmap disappears
+        from the scan carry (identical results and counts, much cheaper
+        per step).
     """
     strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u,
-                                      block_size)
+                                      block_size, rank_desc=rank_desc)
     res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
     # public depth unit is list depth, not blocks
     return res._replace(depth=res.depth * block_size)
@@ -87,17 +101,166 @@ def blocked_topk_batched(
     per-query liveness gating keeps ``n_scored``/``depth`` faithful to the
     sequential algorithm even for queries that certified early.
     """
-    fn = functools.partial(
-        blocked_topk, k=k, block_size=block_size, max_blocks=max_blocks
-    )
-    return jax.vmap(fn, in_axes=(None, None, None, 0))(
-        targets, index.order_desc, index.t_sorted_desc, U
-    )
+    def one(u):
+        return blocked_topk(targets, index.order_desc, index.t_sorted_desc,
+                            u, k, block_size, max_blocks,
+                            rank_desc=index.rank_desc)
+
+    return jax.vmap(one)(U)
+
+
+# ---------------------------------------------------------------------------
+# Chunked TA: block-shaped execution, item-at-a-time accounting
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "max_rounds"))
+def chunked_ta_topk(
+    targets: Array,
+    order_desc: Array,
+    t_sorted_desc: Array,
+    rank_desc: Array,
+    u: Array,
+    k: int,
+    chunk: int = 32,
+    max_rounds: int = -1,
+) -> TopKResult:
+    """Exact TA whose rounds are processed ``chunk`` at a time.
+
+    One driver step gathers and scores ``R * chunk`` candidates (one
+    MXU-shaped pass), then replays the chunk as ``chunk`` sequential paper
+    rounds with per-candidate prefix masking — so the returned
+    ``n_scored``/``depth`` are identical to the ``chunk=1`` sequential
+    algorithm (and to :func:`repro.core.threshold.threshold_topk_np`),
+    while the wall-clock cost per round drops by ~``chunk``.
+
+    ``max_rounds`` is the paper's halted-TA budget, enforced at ROUND
+    granularity even mid-chunk. ``depth`` is returned in rounds
+    (= list depth), the same unit as ``blocked_topk`` at ``block_size=1``.
+    """
+    strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u, chunk,
+                                      rank_desc=rank_desc, ta_rounds=True)
+    # at chunk=1 the strategy degenerates to the plain blocked scan, whose
+    # halting budget is counted in (single-round) steps
+    return pruned_block_scan(targets, u, strategy, k,
+                             max_steps=max_rounds if chunk == 1 else -1,
+                             max_rounds=max_rounds)
+
+
+def chunked_ta_topk_batched(
+    targets: Array,
+    index: TopKIndex,
+    U: Array,
+    k: int,
+    chunk: int = 32,
+    max_rounds: int = -1,
+) -> TopKResult:
+    """vmap of :func:`chunked_ta_topk` over a query batch ``U: [B, R]``."""
+    def one(u):
+        return chunked_ta_topk(targets, index.order_desc,
+                               index.t_sorted_desc, index.rank_desc, u, k,
+                               chunk=chunk, max_rounds=max_rounds)
+
+    return jax.vmap(one)(U)
 
 
 # ---------------------------------------------------------------------------
 # Norm-ordered Cauchy-Schwarz block pruning (beyond paper; exact)
 # ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))
+def norm_pruned_topk_batched(
+    targets_by_norm: Array,
+    norm_order: Array,
+    norms_sorted: Array,
+    U: Array,
+    k: int,
+    block_size: int = 256,
+    max_blocks: int = -1,
+) -> TopKResult:
+    """Batched-native norm scan: ONE shared tile per step for the batch.
+
+    Unlike the list-based engines, the norm scan enumerates the SAME
+    catalogue prefix in the same order for every query — so a lockstep
+    batch never needs per-query gathers. Each step slices one contiguous
+    ``[block, R]`` tile of the norm-ordered catalogue and scores the whole
+    batch with a single ``[B, R] @ [R, block]`` matmul (the Pallas
+    kernel's execution shape, in pure XLA; DESIGN.md §6). Per-query
+    liveness gates every state update, so each query's
+    ``n_scored``/``depth`` equal its own sequential scan's; the loop runs
+    until the slowest live query certifies.
+
+    Returns catalogue ids (rows are remapped through ``norm_order`` once,
+    after the loop).
+    """
+    M, R = targets_by_norm.shape
+    B = U.shape[0]
+    k = min(k, M)
+    n_steps = -(-M // block_size)
+    cap = n_steps if max_blocks < 0 else min(max_blocks, n_steps)
+    next_starts = jnp.minimum(
+        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, M - 1)
+    bound_norms = norms_sorted[next_starts]              # [n_steps]
+    u_norms = jnp.linalg.norm(U, axis=1)                 # [B]
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    neg_inf = jnp.asarray(float("-inf"), targets_by_norm.dtype)
+
+    def cond(s):
+        step, _, _, _, _, lower, upper = s
+        return jnp.logical_and(step < cap, jnp.any(lower < upper))
+
+    def body(s):
+        step, top_vals, top_ids, n_scored, depth, lower, upper = s
+        live = lower < upper                             # [B]
+        d0 = step * block_size
+        start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+        tile = jax.lax.dynamic_slice_in_dim(targets_by_norm, start,
+                                            block_size)  # [block, R]
+        scores = U @ tile.T                              # [B, block]
+        rows = start + offs
+        valid = rows >= d0          # tail block slides back; mask re-reads
+        masked = jnp.where(valid[None, :], scores, neg_inf)
+        # two-stage merge (DESIGN.md §6): block-local top_k over the BARE
+        # scores array (top_k over the K+C concatenation falls off
+        # XLA:CPU's fast path), then the driver's merge helper — whose
+        # lowering (2K-lane fold on CPU, rank network off-CPU) and
+        # carry-wins-ties invariant are shared with every other engine
+        kk = min(k, block_size)
+        bv, bpos = jax.lax.top_k(masked, kk)             # [B, kk]
+        bi = rows[bpos]
+        if kk < k:
+            bv = jnp.concatenate(
+                [bv, jnp.full((B, k - kk), float("-inf"), bv.dtype)], axis=1)
+            bi = jnp.concatenate(
+                [bi, jnp.full((B, k - kk), -1, bi.dtype)], axis=1)
+        new_vals, new_ids = jax.vmap(
+            lambda tv, ti, v, i: merge_topk_sorted(tv, ti, v, i, k)
+        )(top_vals, top_ids, bv, bi)
+        fresh = jnp.sum(valid).astype(jnp.int32)
+        gate = live[:, None]
+        return (step + 1,
+                jnp.where(gate, new_vals, top_vals),
+                jnp.where(gate, new_ids, top_ids),
+                jnp.where(live, n_scored + fresh, n_scored),
+                jnp.where(live, depth + 1, depth),
+                jnp.where(live, new_vals[:, k - 1], lower),
+                jnp.where(live, u_norms * bound_norms[step], upper))
+
+    init = (jnp.int32(0),
+            jnp.full((B, k), float("-inf"), targets_by_norm.dtype),
+            jnp.full((B, k), -1, jnp.int32),
+            jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), float("-inf"), targets_by_norm.dtype),
+            jnp.full((B,), jnp.inf, targets_by_norm.dtype))
+    if cap >= 1:
+        init = body(init)       # block 0 is unconditionally live: unroll
+    _, top_vals, top_ids, n_scored, depth, _, _ = jax.lax.while_loop(
+        cond, body, init)
+    ids = jnp.where(top_ids >= 0,
+                    norm_order[jnp.clip(top_ids, 0, M - 1)], -1)
+    return TopKResult(top_vals, ids, n_scored, depth * block_size)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))
@@ -109,6 +272,7 @@ def norm_pruned_topk(
     k: int,
     block_size: int = 256,
     max_blocks: int = -1,
+    targets_by_norm: Optional[Array] = None,
 ) -> TopKResult:
     """Exact top-K scanning blocks in decreasing-norm order.
 
@@ -120,8 +284,19 @@ def norm_pruned_topk(
     (e.g. cosine-normalised items), where BTA should be used instead.
 
     ``max_blocks`` is the uniform halted variant (same contract as
-    :func:`blocked_topk`).
+    :func:`blocked_topk`). ``targets_by_norm``
+    (:attr:`repro.core.index.TopKIndex.targets_by_norm`) turns the per-
+    block row gather into a contiguous slice + matvec — same results,
+    Pallas-layout memory traffic.
     """
-    strategy = norm_block_strategy(norm_order, norms_sorted, u, block_size)
+    strategy = norm_block_strategy(norm_order, norms_sorted, u, block_size,
+                                   targets_by_norm=targets_by_norm)
     res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
+    if targets_by_norm is not None and targets.shape[0] >= block_size:
+        # the slice path scans over norm-ordered ROW numbers (no id gather
+        # inside the loop); map the k winners back to catalogue ids once
+        m = targets.shape[0]
+        ids = jnp.where(res.indices >= 0,
+                        norm_order[jnp.clip(res.indices, 0, m - 1)], -1)
+        res = res._replace(indices=ids)
     return res._replace(depth=res.depth * block_size)

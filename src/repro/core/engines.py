@@ -2,16 +2,26 @@
 
 The serving layer, the benchmark harness, and tests all dispatch through
 this registry (DESIGN.md §1) instead of hand-rolled ``if/elif`` chains.
-An :class:`Engine` bundles the callable with capability metadata (exact?
-needs the sorted-list index? batched? which backend executes it?) so
-callers can enumerate, filter, and sweep engines they have never heard of
-— which is how future engines (LEMP-style per-bucket bounds, sharded
-variants, approximate modes) become reachable from every layer by adding
-one ``register`` call.
+An :class:`Engine` bundles a batched-executable factory with capability
+metadata (exact? needs the sorted-list index? batched? which backend
+executes it?) so callers can enumerate, filter, and sweep engines they
+have never heard of — which is how future engines (LEMP-style per-bucket
+bounds, sharded variants, approximate modes) become reachable from every
+layer by adding one ``register`` call.
 
 Engines run against an :class:`EngineContext` — the catalogue plus lazily
 built derived state (sorted-list index, Pallas catalogue) shared across
 queries, so a server builds it once and every engine reuses it.
+
+**Compilation cache** (DESIGN.md §6): ``Engine.run`` dispatches through a
+persistent per-context ``jax.jit`` cache keyed by
+``(engine, k, batch-bucket)``. Batch sizes are bucketed to the next power
+of two (queries are padded by repeating the last row, results sliced
+back), so a serving process compiles each engine a handful of times total
+instead of re-tracing ``vmap`` closures on every call.
+:meth:`EngineContext.warmup` populates the cache ahead of traffic, and
+:attr:`EngineContext.trace_counts` counts actual traces per engine so
+tests can assert the cache is hit (0 new traces after warmup).
 
 Registered engines:
 
@@ -19,7 +29,7 @@ Registered engines:
 name        exact    needs_index  backend   algorithm
 ==========  =======  ===========  ========  ==================================
 ``naive``   yes      no           jax       full matmul + top_k
-``ta``      yes      yes          jax       TA rounds (blocked strategy, B=1)
+``ta``      yes      yes          jax       chunked TA rounds (count-faithful)
 ``bta``     yes      yes          jax       Block Threshold Algorithm
 ``norm``    yes      yes          jax       Cauchy-Schwarz norm-block scan
 ``pallas``  yes      yes          pallas    norm-block scan as a TPU kernel
@@ -30,7 +40,9 @@ name        exact    needs_index  backend   algorithm
 lists are never walked, so TA's per-round work collapses to nnz(u)); dense
 batches over catalogues whose norm spectrum decays go to the norm scan
 (``pallas`` on TPU, ``norm`` elsewhere); flat-spectrum dense batches go to
-``bta``.
+``bta``. The sparsity statistic is computed HOST-side from the incoming
+array — dispatch never enqueues work (or a sync) on the device query
+stream.
 
 Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
 ``blocked -> bta``, ``norm_pruned -> norm``, ``topk_mips -> pallas``.
@@ -39,17 +51,27 @@ Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.blocked import blocked_topk_batched, norm_pruned_topk
+from repro.core.blocked import (
+    blocked_topk,
+    chunked_ta_topk,
+    norm_pruned_topk,
+    norm_pruned_topk_batched,
+)
 from repro.core.index import TopKIndex, build_index
 from repro.core.naive import TopKResult, naive_topk
 
 Array = jnp.ndarray
+
+
+def batch_bucket(n: int) -> int:
+    """Next power of two >= n — the compile-cache batch granularity."""
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 class EngineContext:
@@ -61,18 +83,25 @@ class EngineContext:
       block_size: depth/block granularity handed to blocked engines.
       max_blocks: uniform halting budget (``-1`` = run to exactness).
       interpret: Pallas execution mode (``None`` = autodetect by backend).
+      ta_chunk: rounds gathered per chunked-TA step (`ta` engine).
     """
 
     def __init__(self, targets, index: Optional[TopKIndex] = None,
                  block_size: int = 256, max_blocks: int = -1,
-                 interpret=None):
+                 interpret=None, ta_chunk: int = 32):
         self.targets = jnp.asarray(targets, dtype=jnp.float32)
         self.block_size = block_size
         self.max_blocks = max_blocks
         self.interpret = interpret
+        self.ta_chunk = ta_chunk
         self._index = index
         self._catalog = None
         self._norm_decay = None
+        # persistent compiled-executable cache: (engine, k, batch-bucket)
+        # -> jitted batched callable. trace_counts counts actual traces per
+        # engine name (bumped at trace time, so a cache hit adds nothing).
+        self._compiled: Dict[Tuple[str, int, int], Callable] = {}
+        self.trace_counts: Dict[str, int] = {}
 
     @property
     def num_targets(self) -> int:
@@ -108,18 +137,105 @@ class EngineContext:
             self._norm_decay = decayed / head
         return self._norm_decay
 
+    # -- compilation cache ---------------------------------------------------
+
+    def compiled(self, engine: "Engine", k: int, batch: int) -> Callable:
+        """The persistent jitted executable for (engine, k, batch-bucket).
+
+        Built once per key: the engine's ``make_batched`` factory is called
+        EAGERLY (so lazy context state — index, Pallas catalogue — is
+        constructed outside the trace) and the result is wrapped in a
+        ``jax.jit`` that survives across queries. The wrapper bumps
+        ``trace_counts[engine]`` at trace time only.
+        """
+        key = (engine.name, int(k), int(batch))
+        fn = self._compiled.get(key)
+        if fn is None:
+            if engine.make_batched is None:
+                raise ValueError(
+                    f"engine {engine.name!r} is dispatch-only and has no "
+                    "batched executable to compile")
+            batched = engine.make_batched(self, int(k))
+            name = engine.name
+
+            def traced(U, _inner=batched, _name=name):
+                self.trace_counts[_name] = self.trace_counts.get(_name, 0) + 1
+                return _inner(U)
+
+            fn = jax.jit(traced)
+            self._compiled[key] = fn
+        return fn
+
+    def run_engine(self, engine: "Engine", U: Array, k: int) -> TopKResult:
+        """Bucket the batch, pad, run the cached executable, slice back.
+
+        Padding repeats the LAST query row (never zeros: an all-zero query
+        deactivates every list and would drag a vmapped lockstep scan to
+        its worst case); padded rows are dropped before returning, so
+        per-query statistics are untouched.
+        """
+        if not (isinstance(U, jax.Array) and U.ndim == 2
+                and U.dtype == self.targets.dtype):
+            U = jnp.atleast_2d(jnp.asarray(U, self.targets.dtype))
+        b = U.shape[0]
+        bucket = batch_bucket(b)
+        fn = self.compiled(engine, k, bucket)
+        if bucket != b:
+            pad = jnp.broadcast_to(U[b - 1:b], (bucket - b, U.shape[1]))
+            U = jnp.concatenate([U, pad], axis=0)
+        res = fn(U)
+        if bucket != b:
+            res = jax.tree_util.tree_map(lambda a: a[:b], res)
+        return res
+
+    def warmup(self, k: int, batch_sizes=(1, 8, 64),
+               engines: Optional[List[str]] = None) -> "EngineContext":
+        """Compile (engine, k, bucket) executables ahead of traffic.
+
+        Runs one representative batch per bucket through each non-dispatch
+        engine so the first real query hits a compiled executable. Returns
+        self for chaining.
+        """
+        names = list(engines) if engines is not None else [
+            e.name for e in list_engines() if e.backend != "dispatch"]
+        r = int(self.targets.shape[1])
+        for name in names:
+            eng = get_engine(name)
+            for b in batch_sizes:
+                bucket = batch_bucket(b)
+                U = jnp.ones((bucket, r), self.targets.dtype)
+                res = self.compiled(eng, int(k), bucket)(U)
+                jax.block_until_ready(res.values)
+        return self
+
 
 @dataclasses.dataclass(frozen=True)
 class Engine:
-    """A registered engine: callable + capability metadata."""
+    """A registered engine: batched-executable factory + capability metadata.
+
+    ``make_batched(ctx, k)`` returns a pure ``U [B, R] -> TopKResult``
+    callable (trace-safe; any host-side setup such as index construction
+    happens inside the factory, eagerly). ``run`` dispatches through the
+    context's compilation cache. Dispatch pseudo-engines (``auto``) set
+    ``dispatch`` instead and route per batch.
+    """
 
     name: str
-    run: Callable[[EngineContext, Array, int], TopKResult]  # (ctx, U[B,R], k)
+    make_batched: Optional[
+        Callable[["EngineContext", int], Callable[[Array], TopKResult]]
+    ] = None
+    dispatch: Optional[
+        Callable[["EngineContext", Array, int], TopKResult]] = None
     exact: bool = True
     needs_index: bool = True
     supports_batch: bool = True
     backend: str = "jax"
     description: str = ""
+
+    def run(self, ctx: EngineContext, U: Array, k: int) -> TopKResult:
+        if self.dispatch is not None:
+            return self.dispatch(ctx, U, k)
+        return ctx.run_engine(self, U, k)
 
 
 _REGISTRY: Dict[str, Engine] = {}
@@ -169,53 +285,102 @@ def list_engines(exact: Optional[bool] = None,
 # ---------------------------------------------------------------------------
 
 
-def _naive_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
-    return naive_topk(ctx.targets, U, k)
+def _naive_batched(ctx: EngineContext, k: int):
+    targets = ctx.targets
+
+    def fn(U):
+        return naive_topk(targets, U, k)
+
+    return fn
 
 
-def _ta_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
-    # blocked strategy at block_size=1 is id-for-id the paper's TA rounds
-    # (and stays O(R) memory per query under vmap, unlike flipped views)
-    return blocked_topk_batched(ctx.targets, ctx.index, U, k, block_size=1,
-                                max_blocks=ctx.max_blocks)
-
-
-def _bta_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
-    return blocked_topk_batched(ctx.targets, ctx.index, U, k,
-                                ctx.block_size, ctx.max_blocks)
-
-
-def _norm_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+def _ta_batched(ctx: EngineContext, k: int):
+    # chunked TA: block-shaped gather+matvec per step, sequential-round
+    # accounting (count-faithful to the paper's Algorithm 2)
     idx = ctx.index
+    targets = ctx.targets
+    chunk = ctx.ta_chunk
+    max_rounds = ctx.max_blocks
 
     def one(u):
-        return norm_pruned_topk(ctx.targets, idx.norm_order,
-                                idx.norms_sorted, u, k, ctx.block_size,
-                                ctx.max_blocks)
+        return chunked_ta_topk(targets, idx.order_desc, idx.t_sorted_desc,
+                               idx.rank_desc, u, k, chunk=chunk,
+                               max_rounds=max_rounds)
 
-    return jax.vmap(one)(U)
-
-
-def _pallas_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
-    cat = ctx.catalog
-    vals, ids, stats = cat.query_batch(U, k, interpret=ctx.interpret)
-    # stats = (rows scored incl. block padding, blocks visited)
-    return TopKResult(vals, ids, stats[:, 0],
-                      stats[:, 1] * jnp.int32(cat.block_m))
+    return jax.vmap(one)
 
 
-def select_engine(ctx: EngineContext, U: Array) -> Engine:
+def _bta_batched(ctx: EngineContext, k: int):
+    idx = ctx.index
+    targets = ctx.targets
+    block_size, max_blocks = ctx.block_size, ctx.max_blocks
+
+    def one(u):
+        return blocked_topk(targets, idx.order_desc, idx.t_sorted_desc, u,
+                            k, block_size, max_blocks,
+                            rank_desc=idx.rank_desc)
+
+    return jax.vmap(one)
+
+
+def _norm_batched(ctx: EngineContext, k: int):
+    idx = ctx.index
+    targets = ctx.targets
+    block_size, max_blocks = ctx.block_size, ctx.max_blocks
+    if targets.shape[0] >= block_size:
+        # batched-native scan: every query walks the SAME norm-ordered
+        # prefix, so one shared tile slice + one [B,R]@[R,block] matmul
+        # serves the whole batch (no per-query gathers)
+        def fn(U):
+            return norm_pruned_topk_batched(
+                idx.targets_by_norm, idx.norm_order, idx.norms_sorted, U,
+                k, block_size, max_blocks)
+
+        return fn
+
+    def one(u):
+        return norm_pruned_topk(targets, idx.norm_order, idx.norms_sorted,
+                                u, k, block_size, max_blocks,
+                                targets_by_norm=idx.targets_by_norm)
+
+    return jax.vmap(one)
+
+
+def _pallas_batched(ctx: EngineContext, k: int):
+    cat = ctx.catalog       # built eagerly, outside the trace
+    interpret = ctx.interpret
+    block_m = jnp.int32(cat.block_m)
+
+    def fn(U):
+        vals, ids, stats = cat.query_batch(U, k, interpret=interpret)
+        # stats = (rows scored incl. block padding, blocks visited, loaded)
+        return TopKResult(vals, ids, stats[:, 0], stats[:, 1] * block_m)
+
+    return fn
+
+
+def _host_nnz_frac(U) -> float:
+    """Batch sparsity, computed on the HOST.
+
+    numpy/list inputs never touch the device; a jax Array input is read
+    back once (it is an input *value*, not a pending computation, so no
+    work — and no blocking reduction — is enqueued on the device query
+    stream the engines are using).
+    """
+    arr = U if isinstance(U, np.ndarray) else np.asarray(U)
+    return float(np.count_nonzero(arr)) / max(arr.size, 1)
+
+
+def select_engine(ctx: EngineContext, U) -> Engine:
     """The ``auto`` policy: pick an engine for this query batch.
 
-    Decides from two cheap statistics: batch sparsity ``nnz(u)`` (sparse
-    queries make TA's per-round cost collapse to the active lists) and the
-    catalogue norm spectrum (a decaying spectrum lets the Cauchy-Schwarz
-    scan certify after a few contiguous blocks — the Pallas kernel's best
-    case; a flat spectrum makes it a full scan, so BTA wins).
+    Decides from two cheap HOST-side statistics: batch sparsity ``nnz(u)``
+    (sparse queries make TA's per-round cost collapse to the active lists)
+    and the catalogue norm spectrum (a decaying spectrum lets the
+    Cauchy-Schwarz scan certify after a few contiguous blocks — the Pallas
+    kernel's best case; a flat spectrum makes it a full scan, so BTA wins).
     """
-    U = jnp.atleast_2d(U)
-    nnz_frac = float(jnp.mean((U != 0).astype(jnp.float32)))
-    if nnz_frac < 0.25:
+    if _host_nnz_frac(U) < 0.25:
         return get_engine("ta")
     if ctx.norm_decay < 0.5:
         return get_engine(
@@ -223,33 +388,34 @@ def select_engine(ctx: EngineContext, U: Array) -> Engine:
     return get_engine("bta")
 
 
-def _auto_run(ctx: EngineContext, U: Array, k: int) -> TopKResult:
+def _auto_dispatch(ctx: EngineContext, U, k: int) -> TopKResult:
     return select_engine(ctx, U).run(ctx, U, k)
 
 
 register_engine(Engine(
-    name="naive", run=_naive_run, exact=True, needs_index=False,
+    name="naive", make_batched=_naive_batched, exact=True, needs_index=False,
     supports_batch=True, backend="jax",
     description="full matmul + lax.top_k (strongest wall-clock baseline)"))
 register_engine(Engine(
-    name="ta", run=_ta_run, exact=True, needs_index=True,
+    name="ta", make_batched=_ta_batched, exact=True, needs_index=True,
     supports_batch=True, backend="jax",
-    description="Threshold Algorithm rounds (paper Alg. 2; blocked "
-                "strategy at block_size=1)"))
+    description="Threshold Algorithm rounds (paper Alg. 2; chunked "
+                "execution, sequential-round accounting)"))
 register_engine(Engine(
-    name="bta", run=_bta_run, exact=True, needs_index=True,
+    name="bta", make_batched=_bta_batched, exact=True, needs_index=True,
     supports_batch=True, backend="jax",
     description="Block Threshold Algorithm (MXU-shaped TA)"))
 register_engine(Engine(
-    name="norm", run=_norm_run, exact=True, needs_index=True,
+    name="norm", make_batched=_norm_batched, exact=True, needs_index=True,
     supports_batch=True, backend="jax",
     description="Cauchy-Schwarz norm-ordered block scan"))
 register_engine(Engine(
-    name="pallas", run=_pallas_run, exact=True, needs_index=True,
+    name="pallas", make_batched=_pallas_batched, exact=True, needs_index=True,
     supports_batch=True, backend="pallas",
-    description="norm-ordered block scan as a Pallas TPU kernel "
-                "(interpret-mode on CPU)"))
+    description="norm-ordered block scan as a Pallas TPU kernel with "
+                "two-level DMA-skipping bounds (interpret-mode on CPU)"))
 register_engine(Engine(
-    name="auto", run=_auto_run, exact=True, needs_index=True,
+    name="auto", dispatch=_auto_dispatch, exact=True, needs_index=True,
     supports_batch=True, backend="dispatch",
-    description="per-batch pick from nnz(u) + catalogue norm spectrum"))
+    description="per-batch pick from host-side nnz(u) + catalogue norm "
+                "spectrum"))

@@ -31,14 +31,24 @@ class TopKIndex:
       order_desc: ``[R, M]`` int32 — item ids sorted by t_r descending.
       t_sorted_desc: ``[R, M]`` — ``T[order_desc[r], r]`` (bound lookups
         without a gather).
+      rank_desc: ``[R, M]`` int32 — inverse permutations of ``order_desc``
+        (``rank_desc[r, order_desc[r, d]] == d``). These are the per-list
+        cursors the blocked strategies use to answer "is this slot the
+        first enumeration of its item?" by pure arithmetic instead of an
+        O(M) visited bitmap carried through the scan loop (DESIGN.md §6).
       norm_order: ``[M]`` int32 — item ids by decreasing L2 norm.
       norms_sorted: ``[M]`` — norms in that order.
+      targets_by_norm: ``[M, R]`` — the catalogue permuted into
+        decreasing-norm order, so a norm block is a contiguous slice (the
+        Pallas kernel's DMA layout, reused by the XLA norm engine).
     """
 
     order_desc: Array
     t_sorted_desc: Array
+    rank_desc: Array
     norm_order: Array
     norms_sorted: Array
+    targets_by_norm: Array
 
     @property
     def num_targets(self) -> int:
@@ -69,11 +79,18 @@ def build_index(T) -> TopKIndex:
     # paper's Table 1 list convention).
     order_desc = np.argsort(-T_np, axis=0, kind="stable").T.astype(np.int32)  # [R, M]
     t_sorted_desc = np.take_along_axis(T_np.T, order_desc, axis=1)  # [R, M]
+    rank_desc = np.empty_like(order_desc)
+    np.put_along_axis(rank_desc, order_desc,
+                      np.broadcast_to(np.arange(M, dtype=np.int32), (R, M)),
+                      axis=1)
     norms = np.linalg.norm(T_np, axis=1)
     norm_order = np.argsort(-norms, kind="stable").astype(np.int32)
     return TopKIndex(
         order_desc=jnp.asarray(np.ascontiguousarray(order_desc)),
         t_sorted_desc=jnp.asarray(np.ascontiguousarray(t_sorted_desc.astype(np.float32))),
+        rank_desc=jnp.asarray(np.ascontiguousarray(rank_desc)),
         norm_order=jnp.asarray(norm_order),
         norms_sorted=jnp.asarray(norms[norm_order].astype(np.float32)),
+        targets_by_norm=jnp.asarray(
+            np.ascontiguousarray(T_np[norm_order].astype(np.float32))),
     )

@@ -19,6 +19,8 @@ matvec; a future partial-scoring strategy (paper Alg. 3) plugs in there.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -27,7 +29,27 @@ from repro.core.driver import ScanStrategy
 Array = jnp.ndarray
 
 
-def ta_round_strategy(order: Array, t_sorted: Array, u: Array) -> ScanStrategy:
+def _first_occurrence_keys(rank_desc: Array, u: Array) -> Array:
+    """Per-item minimum enumeration key for cursor-based freshness.
+
+    The sequential scan enumerates ROUND-major (depth d, then list r), so
+    an item's first enumeration is the minimum of ``pos_r(y) * R + r``
+    over its active lists, where ``pos_r`` is the walk position in list
+    r's per-query view (``M-1-rank`` when ``u_r < 0`` — the same flip
+    ``query_views`` applies). Inactive (zero-weight) lists are masked to
+    int32 max. A slot ``(r, d)`` is fresh iff ``first_key[id] == d*R+r``.
+    This invariant is load-bearing for count-faithfulness — both list
+    strategies must share it.
+    """
+    R, M = rank_desc.shape
+    pos = jnp.where((u < 0)[:, None], M - 1 - rank_desc, rank_desc)
+    key = pos * R + jnp.arange(R, dtype=jnp.int32)[:, None]
+    key = jnp.where((u != 0)[:, None], key, jnp.iinfo(jnp.int32).max)
+    return jnp.min(key, axis=0)                                  # [M]
+
+
+def ta_round_strategy(order: Array, t_sorted: Array, u: Array,
+                      rank_desc: Optional[Array] = None) -> ScanStrategy:
     """Paper-faithful TA rounds over pre-flipped per-query views.
 
     Args:
@@ -35,6 +57,11 @@ def ta_round_strategy(order: Array, t_sorted: Array, u: Array) -> ScanStrategy:
         :meth:`repro.core.index.TopKIndex.query_views` — already walking in
         decreasing ``u_r * t_r`` order for every list.
       u: ``[R]`` query.
+      rank_desc: optional ``[R, M]`` inverse permutations
+        (:attr:`repro.core.index.TopKIndex.rank_desc`). When given,
+        freshness runs on cursor arithmetic (same round-major key as the
+        blocked strategy) and the driver drops the O(M) visited bitmap
+        from the loop carry — identical results and counts.
     """
     R, M = order.shape
     active = u != 0  # sparse queries: zero-weight lists are never walked
@@ -48,8 +75,17 @@ def ta_round_strategy(order: Array, t_sorted: Array, u: Array) -> ScanStrategy:
         t_at = jax.lax.dynamic_slice_in_dim(t_sorted, step, 1, axis=1)[:, 0]
         return jnp.sum(u * t_at)
 
+    fresh_mask = None
+    if rank_desc is not None:
+        first_key = _first_occurrence_keys(rank_desc, u)
+        slot_r = jnp.arange(R, dtype=jnp.int32)
+
+        def fresh_mask(step, ids, active_slots):
+            return jnp.logical_and(active_slots,
+                                   first_key[ids] == step * R + slot_r)
+
     return ScanStrategy(candidates=candidates, bound=bound, num_steps=M,
-                        track_visited=True)
+                        track_visited=True, fresh_mask=fresh_mask)
 
 
 def blocked_lists_strategy(
@@ -57,6 +93,8 @@ def blocked_lists_strategy(
     t_sorted_desc: Array,
     u: Array,
     block_size: int,
+    rank_desc: Optional[Array] = None,
+    ta_rounds: bool = False,
 ) -> ScanStrategy:
     """BTA enumeration: ``R * block_size`` candidates per step.
 
@@ -65,6 +103,19 @@ def blocked_lists_strategy(
     ``u_r < 0`` (a gather-side index transform, not a data transform) —
     which is why this strategy, unlike :func:`ta_round_strategy`, stays
     O(R*B) memory per query under ``vmap``.
+
+    Args:
+      rank_desc: optional ``[R, M]`` inverse permutations
+        (:attr:`repro.core.index.TopKIndex.rank_desc`). When given,
+        freshness is answered by per-list cursor arithmetic — an item's
+        first enumeration position is computed once per query from the
+        cursors, so the driver drops the O(M) visited bitmap from its loop
+        carry (DESIGN.md §6).
+      ta_rounds: treat each of the ``block_size`` depths as its own
+        sequential TA round (chunked TA): per-round Eq. 3 bounds and the
+        driver's prefix masking keep ``n_scored``/``depth`` identical to
+        the item-at-a-time paper algorithm while the gather + matvec stay
+        block-shaped. Requires ``rank_desc``.
     """
     R, M = order_desc.shape
     neg = u < 0
@@ -81,7 +132,7 @@ def blocked_lists_strategy(
         ids = jnp.take_along_axis(order_desc, cols_eff, axis=1).reshape(-1)
         return ids, active_rep
 
-    def bound(step):
+    def block_bound(step):
         # bound at the block's last processed depth — valid for every unseen
         # item because the lists are monotone (Eq. 3 holds at any depth)
         end = jnp.minimum(step * block_size + block_size - 1, M - 1)
@@ -89,8 +140,45 @@ def blocked_lists_strategy(
         t_end = t_sorted_desc[jnp.arange(R), end_eff]
         return jnp.sum(u * t_end)
 
-    return ScanStrategy(candidates=candidates, bound=bound,
-                        num_steps=-(-M // block_size), track_visited=True)
+    def round_bounds(step):
+        # Eq. 3 at EVERY depth of the block — the chunked-TA driver stops
+        # mid-block at exactly the sequential algorithm's round
+        d = jnp.minimum(step * block_size + offs, M - 1)            # [B]
+        d_eff = jnp.where(neg[:, None], M - 1 - d[None, :], d[None, :])
+        t_at = jnp.take_along_axis(t_sorted_desc, d_eff, axis=1)    # [R, B]
+        return jnp.sum(u[:, None] * t_at, axis=0)                   # [B]
+
+    fresh_mask = None
+    if rank_desc is not None:
+        # Round-major first-occurrence keys: also the slot the sequential
+        # oracle scores an item at (this matters for chunked TA's
+        # per-round counts; for the block-granular scan any slot of the
+        # item's first block would do, and the minimum is in that block
+        # either way).
+        first_key = _first_occurrence_keys(rank_desc, u)
+        slot_r = jnp.repeat(jnp.arange(R, dtype=jnp.int32), block_size,
+                            total_repeat_length=R * block_size)
+        slot_depth = jnp.tile(offs, R)                               # [R*B]
+
+        def fresh_mask(step, ids, active_slots):
+            d = step * block_size + slot_depth      # unclamped true depth
+            sk = d * R + slot_r
+            return jnp.logical_and(
+                jnp.logical_and(active_slots, first_key[ids] == sk), d < M)
+
+    if ta_rounds and block_size > 1:
+        # block_size == 1 falls through: one round per step IS the plain
+        # blocked strategy, and the driver's scalar-bound path handles it.
+        if rank_desc is None:
+            raise ValueError("ta_rounds (chunked TA) requires rank_desc")
+        return ScanStrategy(candidates=candidates, bound=round_bounds,
+                            num_steps=-(-M // block_size),
+                            track_visited=False, fresh_mask=fresh_mask,
+                            rounds_per_step=block_size, num_rounds=M)
+    return ScanStrategy(candidates=candidates, bound=block_bound,
+                        num_steps=-(-M // block_size),
+                        track_visited=fresh_mask is None,
+                        fresh_mask=fresh_mask)
 
 
 def norm_block_strategy(
@@ -98,26 +186,60 @@ def norm_block_strategy(
     norms_sorted: Array,
     u: Array,
     block_size: int,
+    targets_by_norm: Optional[Array] = None,
 ) -> ScanStrategy:
     """Decreasing-norm contiguous blocks with Cauchy-Schwarz bounds.
 
     Block ``b`` covers items ``norm_order[b*B:(b+1)*B]`` (a contiguous
     gather); every unseen score is bounded by ``||u|| * norms_sorted[(b+1)*B]``.
     Items never repeat across blocks, so the driver skips visited tracking.
+
+    When ``targets_by_norm`` (the catalogue pre-permuted into decreasing-
+    norm order, :attr:`repro.core.index.TopKIndex.targets_by_norm`) is
+    given, the whole block step goes memory-layout native (DESIGN.md §6):
+    scoring is a contiguous ``dynamic_slice`` + matvec instead of a row
+    gather (the Pallas kernel's DMA layout, in pure XLA), candidate ids
+    are the norm-ordered ROW numbers (an iota — no id gather in the loop;
+    the caller maps rows back to catalogue ids once, after the scan, via
+    ``norm_order``), and the per-block Cauchy-Schwarz bounds are one
+    precomputed vector indexed per step. The tail block slides back to
+    stay in bounds; rows re-entering from the previous block are masked
+    inactive, so counts are unchanged.
     """
     M = norm_order.shape[0]
     u_norm = jnp.linalg.norm(u)
     offs = jnp.arange(block_size, dtype=jnp.int32)
+    use_slices = targets_by_norm is not None and M >= block_size
+    n_steps = -(-M // block_size)
+    # bound after step b = ||u|| * norm of the first unseen row; one
+    # vectorised precompute, one dynamic index per step
+    next_starts = jnp.minimum(
+        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, M - 1)
+    block_bounds = u_norm * norms_sorted[next_starts]
 
     def candidates(step):
         d0 = step * block_size
+        if use_slices:
+            start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+            rows = start + offs
+            valid = rows >= d0      # mask rows the previous block scored
+            return rows, valid     # local rows; caller remaps after scan
         rows = jnp.minimum(d0 + offs, M - 1)
         valid = (d0 + offs) < M
         return norm_order[rows], valid
 
+    score = None
+    if use_slices:
+        def score(step, ids, active):
+            d0 = step * block_size
+            start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+            tile = jax.lax.dynamic_slice_in_dim(targets_by_norm, start,
+                                                block_size)
+            return tile @ u
+
     def bound(step):
-        next_start = jnp.minimum((step + 1) * block_size, M - 1)
-        return u_norm * norms_sorted[next_start]
+        return block_bounds[step]
 
     return ScanStrategy(candidates=candidates, bound=bound,
-                        num_steps=-(-M // block_size), track_visited=False)
+                        num_steps=n_steps, track_visited=False,
+                        score=score)

@@ -140,6 +140,7 @@ def threshold_topk(
     u: Array,
     k: int,
     max_rounds: int = -1,
+    rank_desc: Array = None,
 ) -> TopKResult:
     """TA via the unified driver. One list depth per driver step.
 
@@ -151,8 +152,18 @@ def threshold_topk(
       k: top-K size (static).
       max_rounds: optional round budget (static); ``-1`` = exact TA,
         ``> 0`` = the *halted* threshold algorithm (paper Section 4.3).
+      rank_desc: optional inverse permutations
+        (:attr:`TopKIndex.rank_desc`): dedup by cursor arithmetic instead
+        of the O(M) visited bitmap (DESIGN.md §6) — same results, same
+        counts, cheaper loop carry.
+
+    The `ta` REGISTRY engine does not run this form: it runs the chunked
+    variant (:func:`repro.core.blocked.chunked_ta_topk`), which gathers
+    ``chunk`` rounds per step and recovers these exact round semantics by
+    prefix masking. This one-depth-per-step form is kept as the directly
+    paper-shaped reference.
     """
-    strategy = ta_round_strategy(order, t_sorted, u)
+    strategy = ta_round_strategy(order, t_sorted, u, rank_desc=rank_desc)
     # driver steps ARE rounds for this strategy, so depth needs no remap
     return pruned_block_scan(targets, u, strategy, k, max_steps=max_rounds)
 
@@ -161,4 +172,5 @@ def threshold_topk_from_index(
     targets: Array, index: TopKIndex, u: Array, k: int, max_rounds: int = -1
 ) -> TopKResult:
     order, t_sorted = index.query_views(u)
-    return threshold_topk(targets, order, t_sorted, u, k, max_rounds)
+    return threshold_topk(targets, order, t_sorted, u, k, max_rounds,
+                          rank_desc=index.rank_desc)

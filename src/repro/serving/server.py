@@ -72,6 +72,15 @@ class TopKServer:
         """Registry names accepted by :meth:`query`'s ``method=``."""
         return engine_names()
 
+    def warmup(self, k: int, batch_sizes=None, engines=None) -> "TopKServer":
+        """Populate the per-engine compiled-executable cache ahead of
+        traffic (DESIGN.md §6). After warmup, same-shape queries hit the
+        cache with zero new traces (``self.ctx.trace_counts`` proves it).
+        """
+        sizes = tuple(batch_sizes) if batch_sizes else (1, self.max_batch)
+        self.ctx.warmup(k, batch_sizes=sizes, engines=engines)
+        return self
+
     def _record(self, method: str, res, dt: float, n: int):
         s = self.stats.setdefault(method, ServeStats())
         s.n_queries += n
@@ -84,12 +93,23 @@ class TopKServer:
 
         ``method`` is any registry name (or alias) from
         :meth:`available_engines`; unknown names raise ``ValueError``.
+        ``auto`` dispatch reads its sparsity statistic from the incoming
+        HOST array — engine selection never enqueues work on the device
+        query stream.
         """
-        U = jnp.atleast_2d(U)
         engine: Engine = get_engine(method)
+        # Keep the batch wherever the caller had it: host inputs are
+        # sliced and dispatched as numpy (auto's nnz statistic never
+        # touches the device), device-resident inputs stay on device with
+        # no round-trip (select_engine reads them back once per chunk
+        # only when method="auto").
+        if isinstance(U, jax.Array):
+            U_all = jnp.atleast_2d(U)
+        else:
+            U_all = np.atleast_2d(np.asarray(U, np.float32))
         outs = []
-        for i in range(0, U.shape[0], self.max_batch):
-            chunk = U[i: i + self.max_batch]
+        for i in range(0, U_all.shape[0], self.max_batch):
+            chunk = U_all[i: i + self.max_batch]
             eng = (select_engine(self.ctx, chunk)
                    if engine.name == "auto" else engine)
             t0 = time.perf_counter()

@@ -2,6 +2,9 @@
 its derived paper-claim flags hold (the same checks benchmarks/run.py
 prints; here they gate CI)."""
 
+import json
+import os
+
 import numpy as np
 import pytest
 
@@ -30,6 +33,33 @@ def test_table4_scaling_shape():
     rs = sorted(fr)
     assert fr[rs[0]] < fr[rs[-1]]            # scores grow with R
     assert all(v < 0.5 for v in fr.values())  # but stay a small fraction
+
+
+@pytest.mark.slow
+def test_engines_sweep_smoke():
+    """Tier-2 benchmark smoke (CI `bench` job): the M=8k engines sweep
+    runs end to end, every exact engine verifies against naive, and the
+    JSON artifact carries the trajectory-tracking fields."""
+    # save under a scratch name: the committed results/bench/engines.json
+    # is the recorded trajectory artifact and must not be clobbered by a
+    # smoke run on a loaded CI box
+    from benchmarks import engines
+    rows = engines.run(quick=True, iters=5, save_as="engines_smoke")
+    assert rows, "sweep produced no rows"
+    bad = [r["engine"] for r in rows if r["exact"] and not r["exact_verified"]]
+    assert not bad, f"exact engines diverged from naive: {bad}"
+    required = {"engine", "resolved", "backend", "M", "avg_scores",
+                "us_per_query", "speedup_vs_naive", "interpret_mode",
+                "exact_verified"}
+    assert all(required <= set(r) for r in rows)
+    # pallas rows off-TPU must be flagged as interpreter time
+    import jax
+    if jax.default_backend() != "tpu":
+        assert all(r["interpret_mode"] for r in rows
+                   if r["resolved"] == "pallas")
+    # the artifact the CI job uploads round-trips through JSON
+    with open(os.path.join("results", "bench", "engines_smoke.json")) as f:
+        assert json.load(f) == rows
 
 
 def test_bta_engines_close_to_ta():

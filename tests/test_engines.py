@@ -12,10 +12,13 @@ import pytest
 
 from repro.core import (
     EngineContext,
+    batch_bucket,
     blocked_topk,
+    chunked_ta_topk,
     engine_names,
     get_engine,
     list_engines,
+    merge_topk_sorted,
     naive_topk,
     norm_pruned_topk,
     pruned_block_scan,
@@ -195,6 +198,155 @@ def test_driver_uniform_halting():
     ):
         res = pruned_block_scan(Tj, uj, strat, 5, max_steps=3)
         assert int(res.depth) <= 3
+
+
+def _tied_problem(rng, m=200, r=8, b=5):
+    """Integer-valued catalogue/queries: exact score ties, exact float32
+    arithmetic — the adversarial regime for count-faithful stopping."""
+    T = rng.integers(-3, 4, (m, r)).astype(np.float32)
+    U = rng.integers(-2, 3, (b, r)).astype(np.float32)
+    U[np.all(U == 0, axis=1), 0] = 1.0
+    return T, U
+
+
+# ---------------------------------------------------------------------------
+# Chunked TA: exactness + n_scored/depth equality vs the sequential oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+@pytest.mark.parametrize("regime", ["mixed_sign", "sparse", "random"])
+def test_chunked_ta_counts_match_sequential_oracle(chunk, regime):
+    rng = np.random.default_rng(41)
+    T = rng.standard_normal((180, 12)).astype(np.float32)
+    idx = build_index(T)
+    for u in _queries(rng, 4, 12)[regime]:
+        ov, _, ostats = threshold_topk_np(T, np.asarray(idx.order_desc), u, 6)
+        r = chunked_ta_topk(jnp.asarray(T), idx.order_desc,
+                            idx.t_sorted_desc, idx.rank_desc,
+                            jnp.asarray(u), 6, chunk=chunk)
+        np.testing.assert_allclose(np.sort(np.asarray(r.values)),
+                                   np.sort(ov), atol=1e-4)
+        assert int(r.n_scored) == ostats.n_scored, (chunk, regime)
+        assert int(r.depth) == ostats.depth, (chunk, regime)
+
+
+@pytest.mark.parametrize("chunk", [1, 8, 32])
+def test_chunked_ta_counts_on_tied_scores(chunk):
+    rng = np.random.default_rng(43)
+    T, U = _tied_problem(rng)
+    idx = build_index(T)
+    for u in U:
+        ov, _, ostats = threshold_topk_np(T, np.asarray(idx.order_desc), u, 5)
+        r = chunked_ta_topk(jnp.asarray(T), idx.order_desc,
+                            idx.t_sorted_desc, idx.rank_desc,
+                            jnp.asarray(u), 5, chunk=chunk)
+        # integer data: arithmetic is exact, so equality is exact too
+        np.testing.assert_array_equal(np.sort(np.asarray(r.values)),
+                                      np.sort(ov).astype(np.float32))
+        assert int(r.n_scored) == ostats.n_scored, chunk
+        assert int(r.depth) == ostats.depth, chunk
+
+
+def test_chunked_ta_halted_budget_is_round_granular():
+    rng = np.random.default_rng(47)
+    T = rng.standard_normal((300, 10)).astype(np.float32)
+    idx = build_index(T)
+    u = jnp.asarray(rng.standard_normal(10).astype(np.float32))
+    for chunk in (1, 8, 32):
+        r = chunked_ta_topk(jnp.asarray(T), idx.order_desc,
+                            idx.t_sorted_desc, idx.rank_desc, u, 5,
+                            chunk=chunk, max_rounds=11)
+        assert int(r.depth) <= 11, chunk
+
+
+# ---------------------------------------------------------------------------
+# Compile cache: repeated same-shape queries must not retrace
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_same_shape_calls_do_not_retrace():
+    rng = np.random.default_rng(53)
+    T = rng.standard_normal((600, 16)).astype(np.float32)
+    ctx = EngineContext(T, block_size=64)
+    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    engines = [e for e in list_engines() if e.backend != "dispatch"]
+    for eng in engines:
+        eng.run(ctx, U, 5)                   # populates the cache
+    warm = dict(ctx.trace_counts)
+    assert all(warm.get(e.name, 0) >= 1 for e in engines)
+    for _ in range(3):
+        for eng in engines:
+            eng.run(ctx, U, 5)
+    assert ctx.trace_counts == warm          # 0 new traces after warmup
+    # a second norm call specifically must not rebuild its vmap closure
+    before = ctx.trace_counts["norm"]
+    get_engine("norm").run(ctx, U, 5)
+    assert ctx.trace_counts["norm"] == before
+
+
+def test_batch_bucketing_pads_and_slices():
+    assert [batch_bucket(n) for n in (1, 2, 3, 5, 8, 9, 64)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+    rng = np.random.default_rng(59)
+    T = rng.standard_normal((400, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=32)
+    U = jnp.asarray(rng.standard_normal((5, 12)).astype(np.float32))
+    ref = np.sort(np.asarray(naive_topk(ctx.targets, U, 4).values), axis=1)
+    for eng in list_engines(exact=True):
+        res = eng.run(ctx, U, 4)             # 5 -> bucket 8 -> sliced to 5
+        assert np.asarray(res.values).shape == (5, 4)
+        np.testing.assert_allclose(np.sort(np.asarray(res.values), axis=1),
+                                   ref, atol=1e-3, err_msg=eng.name)
+    # buckets compile once: batch 5 and 7 share the bucket-8 executable
+    warm = dict(ctx.trace_counts)
+    U7 = jnp.asarray(rng.standard_normal((7, 12)).astype(np.float32))
+    for eng in list_engines(exact=True):
+        eng.run(ctx, U7, 4)
+    assert ctx.trace_counts == warm
+
+
+def test_context_warmup_precompiles():
+    rng = np.random.default_rng(61)
+    ctx = EngineContext(rng.standard_normal((300, 8)).astype(np.float32),
+                        block_size=32)
+    ctx.warmup(3, batch_sizes=(2,), engines=["norm", "bta"])
+    warm = dict(ctx.trace_counts)
+    U = jnp.asarray(rng.standard_normal((2, 8)).astype(np.float32))
+    get_engine("norm").run(ctx, U, 3)
+    get_engine("bta").run(ctx, U, 3)
+    assert ctx.trace_counts == warm
+
+
+# ---------------------------------------------------------------------------
+# Merge network invariants (DESIGN.md §6): both inputs sorted descending
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_merge_topk_sorted_matches_full_sort(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(1, 12))
+    a = np.sort(rng.standard_normal(k).astype(np.float32))[::-1].copy()
+    b = np.sort(rng.standard_normal(k).astype(np.float32))[::-1].copy()
+    if seed % 2:
+        a[: k // 2] = float("-inf")      # partially-filled carry
+    av, ai = jnp.asarray(a), jnp.arange(k, dtype=jnp.int32)
+    bv, bi = jnp.asarray(b), jnp.arange(k, 2 * k, dtype=jnp.int32)
+    ov, oi = merge_topk_sorted(av, ai, bv, bi, k)
+    ref = np.sort(np.concatenate([a, b]))[::-1][:k]
+    np.testing.assert_allclose(np.asarray(ov), ref, atol=0)
+    assert np.asarray(oi).shape == (k,)
+
+
+def test_merge_topk_sorted_ties_prefer_carry():
+    av = jnp.asarray(np.float32([5.0, 3.0, 1.0]))
+    bv = jnp.asarray(np.float32([5.0, 3.0, 2.0]))
+    ai = jnp.asarray(np.int32([10, 11, 12]))
+    bi = jnp.asarray(np.int32([20, 21, 22]))
+    ov, oi = merge_topk_sorted(av, ai, bv, bi, 3)
+    np.testing.assert_allclose(np.asarray(ov), [5.0, 5.0, 3.0])
+    assert list(np.asarray(oi)) == [10, 20, 11]   # carry id first on ties
 
 
 def test_pallas_engine_counts_are_block_granular():

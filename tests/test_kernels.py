@@ -38,6 +38,43 @@ def test_topk_mips_prunes_decaying_catalogue():
     np.testing.assert_allclose(np.asarray(vals), ref, atol=1e-4)
 
 
+def test_topk_mips_two_level_bounds_skip_dma():
+    """The scalar-prefetch pre-screen must cut DMA'd blocks (stats col 2)
+    below the full block count on a decaying catalogue — and results plus
+    scored/visited counts must match the runtime-only bound exactly."""
+    rng = np.random.default_rng(9)
+    T = rng.standard_normal((2048, 16)).astype(np.float32)
+    T *= (1.0 / (1.0 + np.arange(2048)))[:, None].astype(np.float32) ** 0.7
+    cat = MIPSCatalog(T, block_m=128, superblock=4)
+    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    vals, ids, stats = cat.query_batch(U, 5)
+    stats = np.asarray(stats)
+    n_blocks = cat.n_blocks
+    assert np.all(stats[:, 2] < n_blocks), "pre-screen skipped no DMA"
+    assert np.all(stats[:, 1] <= stats[:, 2]), "scored more than loaded"
+    ref = np.sort(np.asarray(U) @ T.T, axis=1)[:, ::-1][:, :5]
+    np.testing.assert_allclose(np.asarray(vals), ref, atol=1e-3)
+    # single-query path too
+    u = jnp.asarray(np.asarray(U)[0])
+    v1, i1, s1 = cat.query(u, 5)
+    np.testing.assert_allclose(np.asarray(v1), ref[0], atol=1e-3)
+    assert int(np.asarray(s1)[2]) < n_blocks
+
+
+def test_topk_mips_flat_norms_stay_exact():
+    """Constant-norm catalogue: the pre-screen can prune nothing (lb0
+    equals every bound at best) — the two-level kernel must degrade to a
+    full scan, not to a wrong answer."""
+    rng = np.random.default_rng(10)
+    T = rng.standard_normal((512, 8)).astype(np.float32)
+    T /= np.linalg.norm(T, axis=1, keepdims=True)
+    cat = MIPSCatalog(T, block_m=64, superblock=4)
+    U = jnp.asarray(rng.standard_normal((3, 8)).astype(np.float32))
+    vals, ids, stats = cat.query_batch(U, 5)
+    ref = np.sort(np.asarray(U) @ T.T, axis=1)[:, ::-1][:, :5]
+    np.testing.assert_allclose(np.asarray(vals), ref, atol=1e-3)
+
+
 @pytest.mark.parametrize("dtype", [np.float32, np.float16])
 @pytest.mark.parametrize("b,f,v,d", [(8, 4, 100, 8), (13, 26, 500, 16),
                                      (32, 39, 200, 10)])

@@ -26,6 +26,26 @@ def test_server_engines_agree_and_count_scores():
     assert srv.stats["norm"].scores_per_query <= 3000
 
 
+def test_server_warmup_then_queries_hit_compiled_cache():
+    """Acceptance: repeated same-shape TopKServer.query calls hit the
+    compiled-executable cache — 0 new traces after warmup."""
+    model = random_model(np.random.default_rng(5), 2000, 16,
+                         "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64)
+    srv.warmup(10, batch_sizes=(8,), engines=["naive", "ta", "bta", "norm"])
+    warm = dict(srv.ctx.trace_counts)
+    U = np.random.default_rng(6).standard_normal((8, 16)).astype(np.float32)
+    for _ in range(3):
+        for eng in ("naive", "ta", "bta", "norm"):
+            srv.query(U, 10, eng)
+    assert srv.ctx.trace_counts == warm
+    # and the answers stayed exact through the cache
+    r = srv.query(U, 10, "norm")
+    r0 = srv.query(U, 10, "naive")
+    np.testing.assert_allclose(np.sort(r.values, axis=1),
+                               np.sort(r0.values, axis=1), atol=1e-4)
+
+
 def test_two_stage_ranker_reranks_retrieved():
     rng = np.random.default_rng(2)
     model = random_model(rng, 2000, 16, "lowrank_spectrum")
