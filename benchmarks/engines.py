@@ -16,6 +16,18 @@ Each row also records ``speedup_vs_naive`` (same M, same batch) and
 interpreter, which is orders of magnitude slower than both compiled TPU
 execution and the XLA engines, and must never be read as a hardware
 result.
+
+Each row additionally carries the engine's MEMORY-TRAFFIC estimate
+(``Engine.traffic``, DESIGN.md §7): ``rows_gathered`` vs
+``rows_contiguous`` (per-query means derived from the measured
+``n_scored``/``depth`` and the context's layout geometry),
+``est_bytes_moved``, and ``gather_fraction`` — so the gather→contiguous
+layout win is visible in the perf trajectory, not just in wall-clock.
+
+Host-only reference oracles (``backend == "numpy"``: ``fagin``,
+``partial``) are registered engines but are skipped here — item-at-a-time
+python loops at M ≥ 8k are minutes-per-batch and say nothing about the
+serving path.
 """
 import time
 
@@ -74,6 +86,8 @@ def run(quick: bool = True, iters: int = 30, save_as: str = "engines"):
         ctx.warmup(K, batch_sizes=(B,))
         naive_us = None
         for eng in list_engines():
+            if eng.backend == "numpy":
+                continue        # host-only oracles: not a serving path
             run_as = select_engine(ctx, U) if eng.name == "auto" else eng
             res, t_min, t_med = _timed(
                 lambda q, e=run_as: e.run(ctx, q, K), U, iters)
@@ -82,6 +96,10 @@ def run(quick: bool = True, iters: int = 30, save_as: str = "engines"):
             us = t_min / B * 1e6
             if eng.name == "naive":
                 naive_us = us
+            traffic = (run_as.traffic(ctx, res) if run_as.traffic
+                       else {"rows_gathered": None, "rows_contiguous": None,
+                             "est_bytes_moved": None,
+                             "gather_fraction": None})
             rows.append({
                 "engine": eng.name,
                 "resolved": run_as.name,
@@ -89,6 +107,11 @@ def run(quick: bool = True, iters: int = 30, save_as: str = "engines"):
                 "exact": eng.exact,
                 "exact_verified": exact_ok,
                 "needs_index": eng.needs_index,
+                "layout": run_as.layout,
+                # 0 = adaptive default left the list_major layout OFF at
+                # this M (the engine ran the plain gather path)
+                "prefix_depth": (ctx.resolved_prefix_depth
+                                 if run_as.layout == "list_major" else None),
                 "interpret_mode": (bool(resolve_interpret(ctx.interpret))
                                    if run_as.backend == "pallas" else False),
                 "M": M, "R": R, "K": K, "batch": B,
@@ -96,6 +119,7 @@ def run(quick: bool = True, iters: int = 30, save_as: str = "engines"):
                 "us_per_query": us,
                 "us_per_query_median": t_med / B * 1e6,
                 "speedup_vs_naive": None,   # filled below
+                **traffic,
             })
         assert naive_us is not None
         for r_ in rows:

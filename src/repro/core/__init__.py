@@ -42,6 +42,15 @@ from repro.core.engines import (
 )
 from repro.core.fagin import FaginStats, fagin_topk_np
 from repro.core.index import TopKIndex, build_index
+from repro.core.layout import (
+    DEFAULT_PREFIX_DEPTH,
+    ListMajorLayout,
+    NormMajorLayout,
+    RowMajorLayout,
+    ShardedNormLayout,
+    build_layout,
+    layout_names,
+)
 from repro.core.naive import TopKResult, naive_topk
 from repro.core.partial import PartialTAStats, partial_threshold_topk_np
 from repro.core.seplr import (
@@ -55,13 +64,17 @@ from repro.core.seplr import (
     random_model,
 )
 from repro.core.sharded import (
+    compat_shard_map,
     hierarchical_merge_topk,
     sharded_blocked_topk,
     sharded_naive_topk,
+    sharded_norm_topk,
 )
 from repro.core.strategies import (
     blocked_lists_strategy,
+    list_prefix_strategy,
     norm_block_strategy,
+    rank_gather_first_keys,
     ta_round_strategy,
 )
 from repro.core.threshold import (
@@ -82,9 +95,15 @@ __all__ = [
     "from_matrix_factorization", "from_linear_multilabel",
     "from_pairwise_kronecker", "kronecker_query", "normalize_query",
     "random_model",
+    "sharded_norm_topk", "compat_shard_map",
     # engine layer
     "ScanState", "ScanStrategy", "pruned_block_scan", "merge_topk_sorted",
-    "ta_round_strategy", "blocked_lists_strategy", "norm_block_strategy",
+    "ta_round_strategy", "blocked_lists_strategy", "list_prefix_strategy",
+    "rank_gather_first_keys", "norm_block_strategy",
     "Engine", "EngineContext", "register_engine", "get_engine",
     "list_engines", "engine_names", "select_engine", "batch_bucket",
+    # layout subsystem
+    "RowMajorLayout", "NormMajorLayout", "ListMajorLayout",
+    "ShardedNormLayout", "build_layout", "layout_names",
+    "DEFAULT_PREFIX_DEPTH",
 ]

@@ -42,15 +42,64 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import merge_topk_sorted, pruned_block_scan
+from repro.core.driver import (merge_block_into_carry_batched,
+                               pruned_block_scan)
 from repro.core.index import TopKIndex
 from repro.core.naive import TopKResult
-from repro.core.strategies import blocked_lists_strategy, norm_block_strategy
+from repro.core.strategies import (
+    blocked_lists_strategy,
+    list_prefix_strategy,
+    norm_block_strategy,
+)
 
 Array = jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))
+def _pallas_tail_scorer(targets, u):
+    """``ids -> scores`` via the gather-fused Pallas kernel (TPU tails).
+
+    One fused DMA-per-row kernel instead of an XLA gather + matvec; only
+    worth compiling on real TPU backends (``tail_pallas=True`` there), so
+    the interpret-mode CPU path never pays the per-row interpreter cost.
+    """
+    from repro.kernels.topk_mips import gather_scores_pallas
+
+    def score_fn(ids):
+        return gather_scores_pallas(targets, ids, u)
+
+    return score_fn
+
+
+def _two_phase_list_scan(targets, order_desc, t_sorted_desc, u, k,
+                         block_size, max_blocks, max_rounds, layout,
+                         ta_rounds, tail_score_fn=None):
+    """Contiguous prefix phase chained into a gather-side tail phase.
+
+    Phase 1 runs :func:`repro.core.strategies.list_prefix_strategy` over
+    the layout's contiguous prefix; its final :class:`ScanState` seeds a
+    :func:`repro.core.strategies.blocked_lists_strategy` tail whose
+    freshness comes from per-block ``rank_by_item`` gathers — so the tail
+    needs neither the O(M) visited bitmap nor the O(R*M) key precompute,
+    and a query that certifies inside the prefix (virtually all of them)
+    never executes a tail iteration (DESIGN.md §7). Results and
+    ``n_scored``/``depth`` are identical to the single-phase gather scan.
+    """
+    prefix = list_prefix_strategy(layout, t_sorted_desc, u, block_size,
+                                  ta_rounds=ta_rounds)
+    _, state = pruned_block_scan(
+        targets, u, prefix, k, max_steps=max_blocks, max_rounds=max_rounds,
+        return_state=True)
+    tail = blocked_lists_strategy(order_desc, t_sorted_desc, u, block_size,
+                                  rank_by_item=layout.rank_by_item,
+                                  ta_rounds=ta_rounds,
+                                  score_fn=tail_score_fn)
+    return pruned_block_scan(targets, u, tail, k, max_steps=max_blocks,
+                             max_rounds=max_rounds, init_state=state)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_size", "max_blocks",
+                                    "tail_pallas"))
 def blocked_topk(
     targets: Array,
     order_desc: Array,
@@ -60,6 +109,8 @@ def blocked_topk(
     block_size: int = 256,
     max_blocks: int = -1,
     rank_desc: Optional[Array] = None,
+    layout=None,
+    tail_pallas: bool = False,
 ) -> TopKResult:
     """Exact top-K via the Block Threshold Algorithm (single query).
 
@@ -77,10 +128,23 @@ def blocked_topk(
         runs on cursor arithmetic and the O(M) visited bitmap disappears
         from the scan carry (identical results and counts, much cheaper
         per step).
+      layout: optional :class:`repro.core.layout.ListMajorLayout`. Blocks
+        inside the layout's prefix are then scored from contiguous
+        ``[R, B, R]`` tiles (no row gathers) and the scan only falls back
+        to gathers past the prefix — identical results and counts
+        (DESIGN.md §7).
     """
-    strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u,
-                                      block_size, rank_desc=rank_desc)
-    res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
+    if layout is not None and layout.prefix_steps(block_size) > 0:
+        res = _two_phase_list_scan(targets, order_desc, t_sorted_desc, u,
+                                   k, block_size, max_blocks, -1, layout,
+                                   ta_rounds=False,
+                                   tail_score_fn=_pallas_tail_scorer(
+                                       targets, u) if tail_pallas else None)
+    else:
+        strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u,
+                                          block_size, rank_desc=rank_desc)
+        res = pruned_block_scan(targets, u, strategy, k,
+                                max_steps=max_blocks)
     # public depth unit is list depth, not blocks
     return res._replace(depth=res.depth * block_size)
 
@@ -114,7 +178,9 @@ def blocked_topk_batched(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("k", "chunk", "max_rounds"))
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chunk", "max_rounds",
+                                    "tail_pallas"))
 def chunked_ta_topk(
     targets: Array,
     order_desc: Array,
@@ -124,6 +190,8 @@ def chunked_ta_topk(
     k: int,
     chunk: int = 32,
     max_rounds: int = -1,
+    layout=None,
+    tail_pallas: bool = False,
 ) -> TopKResult:
     """Exact TA whose rounds are processed ``chunk`` at a time.
 
@@ -137,7 +205,21 @@ def chunked_ta_topk(
     ``max_rounds`` is the paper's halted-TA budget, enforced at ROUND
     granularity even mid-chunk. ``depth`` is returned in rounds
     (= list depth), the same unit as ``blocked_topk`` at ``block_size=1``.
+
+    ``layout`` (a :class:`repro.core.layout.ListMajorLayout`) makes the
+    rounds inside the layout prefix gather-free — contiguous tile slices
+    and a per-query O(R*P) freshness scatter instead of row gathers and
+    the O(R*M) key precompute — chaining into a gather-side tail only for
+    scans that outlive the prefix. Counts stay sequential-faithful on
+    both phases (DESIGN.md §7).
     """
+    if (layout is not None and chunk > 1
+            and layout.prefix_steps(chunk) > 0):
+        return _two_phase_list_scan(targets, order_desc, t_sorted_desc, u,
+                                    k, chunk, -1, max_rounds, layout,
+                                    ta_rounds=True,
+                                    tail_score_fn=_pallas_tail_scorer(
+                                        targets, u) if tail_pallas else None)
     strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u, chunk,
                                       rank_desc=rank_desc, ta_rounds=True)
     # at chunk=1 the strategy degenerates to the plain blocked scan, whose
@@ -221,22 +303,8 @@ def norm_pruned_topk_batched(
         rows = start + offs
         valid = rows >= d0          # tail block slides back; mask re-reads
         masked = jnp.where(valid[None, :], scores, neg_inf)
-        # two-stage merge (DESIGN.md §6): block-local top_k over the BARE
-        # scores array (top_k over the K+C concatenation falls off
-        # XLA:CPU's fast path), then the driver's merge helper — whose
-        # lowering (2K-lane fold on CPU, rank network off-CPU) and
-        # carry-wins-ties invariant are shared with every other engine
-        kk = min(k, block_size)
-        bv, bpos = jax.lax.top_k(masked, kk)             # [B, kk]
-        bi = rows[bpos]
-        if kk < k:
-            bv = jnp.concatenate(
-                [bv, jnp.full((B, k - kk), float("-inf"), bv.dtype)], axis=1)
-            bi = jnp.concatenate(
-                [bi, jnp.full((B, k - kk), -1, bi.dtype)], axis=1)
-        new_vals, new_ids = jax.vmap(
-            lambda tv, ti, v, i: merge_topk_sorted(tv, ti, v, i, k)
-        )(top_vals, top_ids, bv, bi)
+        new_vals, new_ids = merge_block_into_carry_batched(
+            top_vals, top_ids, masked, rows, k)
         fresh = jnp.sum(valid).astype(jnp.int32)
         gate = live[:, None]
         return (step + 1,

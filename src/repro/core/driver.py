@@ -136,6 +136,31 @@ def _merge_block_into_carry(top_vals, top_ids, masked_scores, ids, k):
     return merge_topk_sorted(top_vals, top_ids, bv, bi, k)
 
 
+def merge_block_into_carry_batched(top_vals, top_ids, masked_scores,
+                                   rows, k):
+    """Batched :func:`_merge_block_into_carry`: a shared tile's scores.
+
+    One block of ``[B, C]`` masked scores over ONE shared id row vector
+    ``rows [C]`` (the lockstep batched scans: every query reads the same
+    contiguous tile), merged into every query's ``[B, K]`` carry. Same
+    two-stage invariant as the per-query helper: block-local
+    ``top_k(C -> K)`` over the bare scores, pad to K lanes, then the O(K)
+    sorted merge — never ``top_k`` over a ``K + C`` concatenation.
+    """
+    B, c = masked_scores.shape
+    kk = min(k, c)
+    bv, bpos = jax.lax.top_k(masked_scores, kk)          # [B, kk]
+    bi = rows[bpos]
+    if kk < k:
+        bv = jnp.concatenate(
+            [bv, jnp.full((B, k - kk), NEG_INF, bv.dtype)], axis=1)
+        bi = jnp.concatenate(
+            [bi, jnp.full((B, k - kk), -1, bi.dtype)], axis=1)
+    return jax.vmap(
+        lambda tv, ti, v, i: merge_topk_sorted(tv, ti, v, i, k)
+    )(top_vals, top_ids, bv, bi)
+
+
 @dataclasses.dataclass(frozen=True)
 class ScanStrategy:
     """What a pruned-scan engine must answer; everything else is the driver.
@@ -203,7 +228,9 @@ def pruned_block_scan(
     k: int,
     max_steps: int = -1,
     max_rounds: int = -1,
-) -> TopKResult:
+    init_state: Optional[ScanState] = None,
+    return_state: bool = False,
+):
     """Run ``strategy`` to exactness (or to the ``max_steps`` halt budget).
 
     Returns a :class:`TopKResult` whose ``depth`` field is the number of
@@ -212,6 +239,18 @@ def pruned_block_scan(
     number of sequential rounds processed — count-faithful to the
     item-at-a-time algorithm. ``max_rounds`` is the halted budget in
     rounds for chunked strategies (``max_steps`` still caps outer steps).
+
+    **Phase chaining** (DESIGN.md §7): ``return_state=True`` additionally
+    returns the final :class:`ScanState`; passing it as another scan's
+    ``init_state`` resumes with the carried top-K, bounds, and counters
+    intact. The step counter is ABSOLUTE across phases — the second
+    strategy's ``candidates``/``bound`` must interpret ``step`` on the
+    same global block axis, and ``num_steps``/``max_steps`` cap that
+    global counter. A query already certified at the phase boundary
+    (``lower >= upper``) never executes a body iteration of the second
+    phase. Both phases must agree on the visited representation (the
+    list-layout phases both use ``fresh_mask``, so the O(M) bitmap never
+    appears).
     """
     M = targets.shape[0]
     k = min(k, M)
@@ -325,24 +364,28 @@ def pruned_block_scan(
             lambda new, old: old if new is old else jnp.where(live, new, old),
             nxt, s)
 
-    visited0 = jnp.zeros((M if use_visited else 1,), dtype=bool)
-    init = ScanState(
-        step=jnp.int32(0),
-        top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
-        top_ids=jnp.full((k,), -1, dtype=jnp.int32),
-        visited=visited0,
-        n_scored=jnp.int32(0),
-        rounds=jnp.int32(0),
-        lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
-        upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
-    )
-    if cap >= 1:
-        # the first block is unconditionally live (lower = -inf < upper =
-        # +inf), so unroll it: XLA folds the literal init state into the
-        # block-0 computation and the loop runs one iteration fewer. A
-        # second, live-gated unroll covers the common certify-in-two-blocks
-        # case without paying while-loop carry shuffling for it.
-        init = body(init)
+    if init_state is not None:
+        init = init_state
+    else:
+        visited0 = jnp.zeros((M if use_visited else 1,), dtype=bool)
+        init = ScanState(
+            step=jnp.int32(0),
+            top_vals=jnp.full((k,), NEG_INF, dtype=targets.dtype),
+            top_ids=jnp.full((k,), -1, dtype=jnp.int32),
+            visited=visited0,
+            n_scored=jnp.int32(0),
+            rounds=jnp.int32(0),
+            lower=jnp.asarray(NEG_INF, dtype=targets.dtype),
+            upper=jnp.asarray(jnp.inf, dtype=targets.dtype),
+        )
+        if cap >= 1:
+            # the first block is unconditionally live (lower = -inf < upper
+            # = +inf), so unroll it: XLA folds the literal init state into
+            # the block-0 computation and the loop runs one iteration
+            # fewer. (Chained phases skip this: their first block is NOT
+            # unconditionally live — the prior phase may have certified.)
+            init = body(init)
     final = jax.lax.while_loop(cond, body, init)
     depth = final.rounds if chunk > 1 else final.step
-    return TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
+    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
+    return (res, final) if return_state else res

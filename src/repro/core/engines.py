@@ -23,18 +23,35 @@ instead of re-tracing ``vmap`` closures on every call.
 :attr:`EngineContext.trace_counts` counts actual traces per engine so
 tests can assert the cache is hit (0 new traces after warmup).
 
+Every engine also declares the :mod:`repro.core.layout` it consumes
+(``Engine.layout``); :meth:`EngineContext.layout` builds layouts lazily
+and caches them per context, exactly like the sorted-list index. A
+``traffic`` estimator per engine turns measured ``n_scored``/``depth``
+into memory-traffic terms (rows gathered vs contiguous rows read,
+estimated bytes moved) for the benchmark sweep.
+
 Registered engines:
 
-==========  =======  ===========  ========  ==================================
-name        exact    needs_index  backend   algorithm
-==========  =======  ===========  ========  ==================================
-``naive``   yes      no           jax       full matmul + top_k
-``ta``      yes      yes          jax       chunked TA rounds (count-faithful)
-``bta``     yes      yes          jax       Block Threshold Algorithm
-``norm``    yes      yes          jax       Cauchy-Schwarz norm-block scan
-``pallas``  yes      yes          pallas    norm-block scan as a TPU kernel
-``auto``    yes      yes          dispatch  picks per batch (see below)
-==========  =======  ===========  ========  ==================================
+================  =====  ===========  ========  ===========  ==================================
+name              exact  needs_index  backend   layout       algorithm
+================  =====  ===========  ========  ===========  ==================================
+``naive``         yes    no           jax       row_major    full matmul + top_k
+``ta``            yes    yes          jax       list_major   chunked TA rounds (count-faithful)
+``bta``           yes    yes          jax       list_major   Block Threshold Algorithm
+``norm``          yes    yes          jax       norm_major   Cauchy-Schwarz norm-block scan
+``norm_sharded``  yes    yes          jax       norm_sharded shared-tile norm scan under
+                                                             shard_map, cross-shard pmax bounds
+``pallas``        yes    yes          pallas    norm_major   norm-block scan as a TPU kernel
+``fagin``         yes    yes          numpy     row_major    Fagin's Algorithm (host oracle)
+``partial``       yes    yes          numpy     row_major    Partial TA, Alg. 3 (host oracle)
+``auto``          yes    yes          dispatch  —            picks per batch (see below)
+================  =====  ===========  ========  ===========  ==================================
+
+The two ``numpy`` rows are the paper-faithful host oracles: exact,
+host-only, never jitted or batched (``host_only=True``,
+``make_batched=None`` — they run as dispatch loops). Registering them
+makes ``list_engines()`` cover every implemented algorithm; the
+benchmark sweep skips ``backend="numpy"`` rows when timing.
 
 ``auto`` picks per query batch: sparse batches go to ``ta`` (zero-weight
 lists are never walked, so TA's per-round work collapses to nnz(u)); dense
@@ -64,6 +81,9 @@ from repro.core.blocked import (
     norm_pruned_topk_batched,
 )
 from repro.core.index import TopKIndex, build_index
+from repro.core.layout import (DEFAULT_PREFIX_DEPTH,
+                               LIST_LAYOUT_MIN_TARGETS,
+                               build_layout)
 from repro.core.naive import TopKResult, naive_topk
 
 Array = jnp.ndarray
@@ -84,24 +104,81 @@ class EngineContext:
       max_blocks: uniform halting budget (``-1`` = run to exactness).
       interpret: Pallas execution mode (``None`` = autodetect by backend).
       ta_chunk: rounds gathered per chunked-TA step (`ta` engine).
+      prefix_depth: ``list_major`` layout prefix rows per dimension.
+        ``None`` (default) is ADAPTIVE — the layout turns on at
+        ``DEFAULT_PREFIX_DEPTH`` once ``M >= LIST_LAYOUT_MIN_TARGETS``
+        and stays off below that (the cache-resident gather path is
+        faster there); ``0`` disables the layout path entirely; any
+        other value is honoured as given (clamped to ``M``). See
+        :attr:`resolved_prefix_depth`.
     """
 
     def __init__(self, targets, index: Optional[TopKIndex] = None,
                  block_size: int = 256, max_blocks: int = -1,
-                 interpret=None, ta_chunk: int = 32):
+                 interpret=None, ta_chunk: int = 32,
+                 prefix_depth: Optional[int] = None):
         self.targets = jnp.asarray(targets, dtype=jnp.float32)
         self.block_size = block_size
         self.max_blocks = max_blocks
         self.interpret = interpret
         self.ta_chunk = ta_chunk
+        # list_major prefix depth; None -> DEFAULT_PREFIX_DEPTH, 0 disables
+        # the layout path entirely (list engines fall back to gathers)
+        self.prefix_depth = prefix_depth
         self._index = index
         self._catalog = None
         self._norm_decay = None
+        self._layouts: Dict[str, object] = {}
         # persistent compiled-executable cache: (engine, k, batch-bucket)
         # -> jitted batched callable. trace_counts counts actual traces per
         # engine name (bumped at trace time, so a cache hit adds nothing).
         self._compiled: Dict[Tuple[str, int, int], Callable] = {}
         self.trace_counts: Dict[str, int] = {}
+
+    @property
+    def resolved_prefix_depth(self) -> int:
+        """The list_major prefix depth this context builds (0 = disabled).
+
+        ``prefix_depth=None`` is adaptive: the layout only turns on once
+        the catalogue outgrows cache (``LIST_LAYOUT_MIN_TARGETS``) —
+        below that the plain gather path is faster and the default stays
+        on it. An explicit ``prefix_depth`` is always honoured.
+        """
+        if self.prefix_depth is None:
+            if self.num_targets < LIST_LAYOUT_MIN_TARGETS:
+                return 0
+            return int(min(self.num_targets, DEFAULT_PREFIX_DEPTH))
+        return int(min(self.num_targets, self.prefix_depth))
+
+    def layout(self, name: str):
+        """The named catalogue layout, built lazily and cached per context.
+
+        ``list_major`` resolves the context's ``prefix_depth``;
+        ``norm_sharded`` deals the norm order over all visible devices on
+        a 1-axis ``("data",)`` mesh (a 1-device mesh is valid — the
+        sharded engine then degenerates to the single-host scan).
+        """
+        lay = self._layouts.get(name)
+        if lay is None:
+            params = {}
+            if name == "list_major":
+                params["prefix_depth"] = self.resolved_prefix_depth
+            elif name == "norm_sharded":
+                mesh = self.mesh
+                params["n_shards"] = mesh.devices.size
+                params["mesh"] = mesh
+            index = None if name == "row_major" else self.index
+            lay = build_layout(name, self.targets, index, **params)
+            self._layouts[name] = lay
+        return lay
+
+    @property
+    def mesh(self):
+        """1-axis ``("data",)`` mesh over all visible devices."""
+        if getattr(self, "_mesh", None) is None:
+            devs = np.asarray(jax.devices())
+            self._mesh = jax.sharding.Mesh(devs, ("data",))
+        return self._mesh
 
     @property
     def num_targets(self) -> int:
@@ -197,7 +274,7 @@ class EngineContext:
         self for chaining.
         """
         names = list(engines) if engines is not None else [
-            e.name for e in list_engines() if e.backend != "dispatch"]
+            e.name for e in list_engines() if e.make_batched is not None]
         r = int(self.targets.shape[1])
         for name in names:
             eng = get_engine(name)
@@ -216,8 +293,16 @@ class Engine:
     ``make_batched(ctx, k)`` returns a pure ``U [B, R] -> TopKResult``
     callable (trace-safe; any host-side setup such as index construction
     happens inside the factory, eagerly). ``run`` dispatches through the
-    context's compilation cache. Dispatch pseudo-engines (``auto``) set
-    ``dispatch`` instead and route per batch.
+    context's compilation cache. Dispatch pseudo-engines (``auto``) and
+    host-only reference oracles (``fagin``, ``partial``) set ``dispatch``
+    instead and route per batch — host oracles are never jitted.
+
+    ``layout`` names the :mod:`repro.core.layout` the engine consumes
+    (built via :meth:`EngineContext.layout`); ``traffic`` estimates the
+    engine's memory traffic for a measured :class:`TopKResult` (per-query
+    means: rows gathered, contiguous rows read, bytes moved) — the
+    benchmark sweep records it so layout wins show up in the perf
+    trajectory, not just wall-clock.
     """
 
     name: str
@@ -230,6 +315,10 @@ class Engine:
     needs_index: bool = True
     supports_batch: bool = True
     backend: str = "jax"
+    layout: Optional[str] = None
+    host_only: bool = False
+    traffic: Optional[
+        Callable[["EngineContext", TopKResult], Dict[str, float]]] = None
     description: str = ""
 
     def run(self, ctx: EngineContext, U: Array, k: int) -> TopKResult:
@@ -294,18 +383,29 @@ def _naive_batched(ctx: EngineContext, k: int):
     return fn
 
 
+def _list_layout(ctx: EngineContext):
+    """The list_major layout, or None when the context disables it."""
+    return ctx.layout("list_major") if ctx.resolved_prefix_depth > 0 \
+        else None
+
+
 def _ta_batched(ctx: EngineContext, k: int):
-    # chunked TA: block-shaped gather+matvec per step, sequential-round
-    # accounting (count-faithful to the paper's Algorithm 2)
+    # chunked TA: block-shaped work per step, sequential-round accounting
+    # (count-faithful to the paper's Algorithm 2). With the list_major
+    # layout the rounds inside the prefix are gather-free (DESIGN.md §7).
     idx = ctx.index
     targets = ctx.targets
     chunk = ctx.ta_chunk
     max_rounds = ctx.max_blocks
+    layout = _list_layout(ctx)
+    # gather-fused Pallas tail scoring only pays on real TPU backends
+    tail_pallas = jax.default_backend() == "tpu" and layout is not None
 
     def one(u):
         return chunked_ta_topk(targets, idx.order_desc, idx.t_sorted_desc,
                                idx.rank_desc, u, k, chunk=chunk,
-                               max_rounds=max_rounds)
+                               max_rounds=max_rounds, layout=layout,
+                               tail_pallas=tail_pallas)
 
     return jax.vmap(one)
 
@@ -314,17 +414,20 @@ def _bta_batched(ctx: EngineContext, k: int):
     idx = ctx.index
     targets = ctx.targets
     block_size, max_blocks = ctx.block_size, ctx.max_blocks
+    layout = _list_layout(ctx)
+    tail_pallas = jax.default_backend() == "tpu" and layout is not None
 
     def one(u):
         return blocked_topk(targets, idx.order_desc, idx.t_sorted_desc, u,
                             k, block_size, max_blocks,
-                            rank_desc=idx.rank_desc)
+                            rank_desc=idx.rank_desc, layout=layout,
+                            tail_pallas=tail_pallas)
 
     return jax.vmap(one)
 
 
 def _norm_batched(ctx: EngineContext, k: int):
-    idx = ctx.index
+    lay = ctx.layout("norm_major")
     targets = ctx.targets
     block_size, max_blocks = ctx.block_size, ctx.max_blocks
     if targets.shape[0] >= block_size:
@@ -333,17 +436,31 @@ def _norm_batched(ctx: EngineContext, k: int):
         # serves the whole batch (no per-query gathers)
         def fn(U):
             return norm_pruned_topk_batched(
-                idx.targets_by_norm, idx.norm_order, idx.norms_sorted, U,
+                lay.targets_by_norm, lay.norm_order, lay.norms_sorted, U,
                 k, block_size, max_blocks)
 
         return fn
 
     def one(u):
-        return norm_pruned_topk(targets, idx.norm_order, idx.norms_sorted,
+        return norm_pruned_topk(targets, lay.norm_order, lay.norms_sorted,
                                 u, k, block_size, max_blocks,
-                                targets_by_norm=idx.targets_by_norm)
+                                targets_by_norm=lay.targets_by_norm)
 
     return jax.vmap(one)
+
+
+def _norm_sharded_batched(ctx: EngineContext, k: int):
+    from repro.core.sharded import sharded_norm_topk
+    lay = ctx.layout("norm_sharded")
+    mesh = ctx.mesh
+    block_size, max_blocks = ctx.block_size, ctx.max_blocks
+    scan = sharded_norm_topk(mesh, ("data",))
+
+    def fn(U):
+        return scan(lay.targets_sharded, lay.norms_sharded,
+                    lay.ids_sharded, U, k, block_size, max_blocks)
+
+    return fn
 
 
 def _pallas_batched(ctx: EngineContext, k: int):
@@ -388,32 +505,162 @@ def select_engine(ctx: EngineContext, U) -> Engine:
     return get_engine("bta")
 
 
+def auto_candidates():
+    """Engine names :func:`select_engine` can resolve to on this backend.
+
+    Warming exactly this set covers every dispatch ``auto`` can make;
+    warming beyond it (``norm_sharded`` in particular, whose layout build
+    copies the whole catalogue) is wasted startup work.
+    """
+    return ["ta", "bta",
+            "pallas" if jax.default_backend() == "tpu" else "norm"]
+
+
 def _auto_dispatch(ctx: EngineContext, U, k: int) -> TopKResult:
     return select_engine(ctx, U).run(ctx, U, k)
 
 
+# ---------------------------------------------------------------------------
+# Host-only reference oracles (paper Algorithms 1 and 3) as engines
+# ---------------------------------------------------------------------------
+
+
+def _host_oracle_dispatch(one_query):
+    """Wrap a numpy oracle ``(T, order_desc, u, k) -> (v, i, n, d)``."""
+
+    def dispatch(ctx: EngineContext, U, k: int) -> TopKResult:
+        T = np.asarray(ctx.targets)
+        od = np.asarray(ctx.index.order_desc)
+        U_np = np.atleast_2d(np.asarray(U, np.float32))
+        k_eff = min(int(k), T.shape[0])
+        vals = np.full((U_np.shape[0], k_eff), float("-inf"), np.float32)
+        ids = np.full((U_np.shape[0], k_eff), -1, np.int32)
+        ns = np.zeros((U_np.shape[0],), np.int32)
+        dep = np.zeros((U_np.shape[0],), np.int32)
+        for b, u in enumerate(U_np):
+            v, i, n, d = one_query(T, od, u, k_eff)
+            vals[b, :len(v)] = v
+            ids[b, :len(i)] = i
+            ns[b], dep[b] = n, d
+        return TopKResult(jnp.asarray(vals), jnp.asarray(ids),
+                          jnp.asarray(ns), jnp.asarray(dep))
+
+    return dispatch
+
+
+def _fagin_one(T, od, u, k):
+    from repro.core.fagin import fagin_topk_np
+    v, i, st = fagin_topk_np(T, od, u, k)
+    return v, i, st.n_scored, st.depth
+
+
+def _partial_one(T, od, u, k):
+    from repro.core.partial import partial_threshold_topk_np
+    v, i, st = partial_threshold_topk_np(T, od, u, k)
+    # n_items_touched == TA's n_scored (Theorem 4 logic: same item set)
+    return v, i, st.n_items_touched, st.depth
+
+
+# ---------------------------------------------------------------------------
+# Memory-traffic estimators (per-query means, from measured counts)
+# ---------------------------------------------------------------------------
+
+
+def _traffic_dict(ctx: EngineContext, rows_gathered, rows_contiguous):
+    r = int(ctx.targets.shape[1])
+    total = rows_gathered + rows_contiguous
+    return {
+        "rows_gathered": float(rows_gathered),
+        "rows_contiguous": float(rows_contiguous),
+        "est_bytes_moved": float(total * r * 4),
+        "gather_fraction": float(rows_gathered / total) if total else 0.0,
+    }
+
+
+def _naive_traffic(ctx, res):
+    return _traffic_dict(ctx, 0.0, float(ctx.num_targets))
+
+
+def _list_traffic(ctx, res):
+    """TA/BTA: depth (list-depth units) splits at the layout prefix.
+
+    Inside the prefix each of the R lists reads its depth range from BOTH
+    direction tiles (head + tail, then a select) — contiguous, 2x rows.
+    Past the prefix every candidate costs a scattered target row PLUS a
+    same-shape ``rank_by_item`` row for freshness. With the layout off
+    (``resolved_prefix_depth == 0``, the adaptive default below
+    ``LIST_LAYOUT_MIN_TARGETS``) the engines run the plain gather path:
+    ONE target row per candidate, and freshness comes from the O(R*M)
+    first-occurrence key precompute — a contiguous stream of the
+    ``[R, M]`` int32 rank array, M row-equivalents of bytes per query.
+    """
+    r = int(ctx.targets.shape[1])
+    p = ctx.resolved_prefix_depth
+    depth = float(np.mean(np.asarray(res.depth)))
+    if p == 0:
+        return _traffic_dict(ctx, depth * r, float(ctx.num_targets))
+    contig = 2.0 * min(depth, p) * r
+    gathered = 2.0 * max(depth - p, 0.0) * r
+    return _traffic_dict(ctx, gathered, contig)
+
+
+def _norm_traffic(ctx, res):
+    # depth is rows enumerated in norm order — all contiguous tile reads
+    return _traffic_dict(ctx, 0.0, float(np.mean(np.asarray(res.depth))))
+
+
+def _host_traffic(ctx, res):
+    # item-at-a-time oracles: every scored row is a random access
+    return _traffic_dict(ctx, float(np.mean(np.asarray(res.n_scored))), 0.0)
+
+
 register_engine(Engine(
     name="naive", make_batched=_naive_batched, exact=True, needs_index=False,
-    supports_batch=True, backend="jax",
+    supports_batch=True, backend="jax", layout="row_major",
+    traffic=_naive_traffic,
     description="full matmul + lax.top_k (strongest wall-clock baseline)"))
 register_engine(Engine(
     name="ta", make_batched=_ta_batched, exact=True, needs_index=True,
-    supports_batch=True, backend="jax",
+    supports_batch=True, backend="jax", layout="list_major",
+    traffic=_list_traffic,
     description="Threshold Algorithm rounds (paper Alg. 2; chunked "
-                "execution, sequential-round accounting)"))
+                "execution, sequential-round accounting, contiguous "
+                "list-prefix tiles)"))
 register_engine(Engine(
     name="bta", make_batched=_bta_batched, exact=True, needs_index=True,
-    supports_batch=True, backend="jax",
-    description="Block Threshold Algorithm (MXU-shaped TA)"))
+    supports_batch=True, backend="jax", layout="list_major",
+    traffic=_list_traffic,
+    description="Block Threshold Algorithm (MXU-shaped TA, contiguous "
+                "list-prefix tiles)"))
 register_engine(Engine(
     name="norm", make_batched=_norm_batched, exact=True, needs_index=True,
-    supports_batch=True, backend="jax",
+    supports_batch=True, backend="jax", layout="norm_major",
+    traffic=_norm_traffic,
     description="Cauchy-Schwarz norm-ordered block scan"))
 register_engine(Engine(
+    name="norm_sharded", make_batched=_norm_sharded_batched, exact=True,
+    needs_index=True, supports_batch=True, backend="jax",
+    layout="norm_sharded", traffic=_norm_traffic,
+    description="shared-tile norm scan under shard_map with cross-shard "
+                "pmax threshold tightening (row-sharded catalogue)"))
+register_engine(Engine(
     name="pallas", make_batched=_pallas_batched, exact=True, needs_index=True,
-    supports_batch=True, backend="pallas",
+    supports_batch=True, backend="pallas", layout="norm_major",
+    traffic=_norm_traffic,
     description="norm-ordered block scan as a Pallas TPU kernel with "
                 "two-level DMA-skipping bounds (interpret-mode on CPU)"))
+register_engine(Engine(
+    name="fagin", dispatch=_host_oracle_dispatch(_fagin_one), exact=True,
+    needs_index=True, supports_batch=False, backend="numpy",
+    layout="row_major", host_only=True, traffic=_host_traffic,
+    description="Fagin's Algorithm (paper Alg. 1; host-only numpy "
+                "reference, no jit)"))
+register_engine(Engine(
+    name="partial", dispatch=_host_oracle_dispatch(_partial_one), exact=True,
+    needs_index=True, supports_batch=False, backend="numpy",
+    layout="row_major", host_only=True, traffic=_host_traffic,
+    description="Partial Threshold Algorithm (paper Alg. 3 / Eq. 4; "
+                "host-only numpy reference, no jit)"))
 register_engine(Engine(
     name="auto", dispatch=_auto_dispatch, exact=True, needs_index=True,
     supports_batch=True, backend="dispatch",

@@ -59,16 +59,18 @@ class TopKIndex:
         return int(self.order_desc.shape[0])
 
     def query_views(self, u: Array):
-        """Per-query list direction: flip dimension r when ``u_r < 0``.
+        """Per-query list direction: dimension r walks ASCENDING when
+        ``u_r < 0``.
 
-        Returns ``(order, t_sorted)`` of shape ``[R, M]`` such that walking
-        column d = 0, 1, ... visits items in decreasing ``u_r * t_r`` order
-        for every r.
+        Returns ``(order_desc, t_sorted_desc, neg)`` where ``neg`` is the
+        ``[R]`` bool direction flag. The strategies resolve the direction
+        by INDEX ARITHMETIC (walk position d reads column ``M-1-d`` when
+        ``neg[r]``) — no ``[R, M]`` flipped copies of either array are
+        materialised per query (they used to be, via ``jnp.where`` over
+        the full index: two O(R*M) copies on every negative-weight
+        query).
         """
-        neg = (u < 0)[:, None]
-        order = jnp.where(neg, jnp.flip(self.order_desc, axis=1), self.order_desc)
-        t_sorted = jnp.where(neg, jnp.flip(self.t_sorted_desc, axis=1), self.t_sorted_desc)
-        return order, t_sorted
+        return self.order_desc, self.t_sorted_desc, u < 0
 
 
 def build_index(T) -> TopKIndex:

@@ -1,0 +1,284 @@
+"""Catalogue layouts: how the catalogue is materialised in memory (DESIGN.md §7).
+
+The paper's algorithms are *enumeration orders* (per-dimension sorted
+lists, decreasing-norm blocks); what makes them fast or slow on real
+hardware is the MEMORY LAYOUT those orders read through. PR 2 left the
+list engines gather-bound — every TA/BTA step fetched ``R * B`` scattered
+catalogue rows — while the norm engine's contiguous ``targets_by_norm``
+tiles made it the wall-clock winner. This module makes the layout a
+first-class, swappable object so every engine *declares* the layout it
+consumes (``Engine.layout``) and :class:`repro.core.engines.EngineContext`
+builds and caches layouts lazily, exactly like the sorted-list index.
+
+Three single-host layouts plus one sharded layout:
+
+``row_major``
+    The catalogue as given — ``targets[ids]`` gathers. The naive engine's
+    layout, and every other layout's fallback.
+
+``norm_major``
+    The decreasing-L2-norm permutation (``targets_by_norm``): a norm
+    block is a contiguous ``[block, R]`` slice — the Pallas kernel's DMA
+    layout, shared with the XLA norm engine.
+
+``list_major``
+    Per-dimension list PREFIXES materialised contiguously: for every
+    dimension r, the catalogue rows in ``order_desc[r]`` order up to a
+    configurable prefix depth P — ``head_rows[R, P, R]`` — plus the same
+    for the ASCENDING walk (``tail_rows``, what a negative query weight
+    reads), the walk-order ids, and the transposed inverse permutations
+    ``rank_by_item[M, R]``. In the hot prefix, where virtually every scan
+    terminates, TA/BTA read contiguous ``[block, R]`` tiles instead of
+    scattered gathers — and per-query freshness needs only an
+    ``O(R * P)`` scatter instead of the old ``O(R * M)`` key precompute.
+    Past the prefix the strategies fall back to gathers (rows from
+    ``targets``, first-occurrence keys from ``rank_by_item``), so
+    exactness and the sequential score counts are unchanged at ANY
+    prefix depth. Footprint: ``4 * R * P * R * 4`` bytes of prefix tiles
+    (head + tail row tiles, float32, plus the same-shape int32 rank
+    tiles) + ``M * R * 4`` for ``rank_by_item`` + the id tables — the
+    full memory/speed trade-off is documented in DESIGN.md §7.
+
+``norm_sharded``
+    The norm-major layout dealt round-robin across a device mesh: global
+    norm rank i lives on shard ``i % n`` at local position ``i // n``, so
+    every shard's local norm spectrum mirrors the global one (no shard
+    gets stuck scanning the whole head). Consumed by the ``norm_sharded``
+    engine (:func:`repro.core.sharded.sharded_norm_topk`).
+
+Layouts holding only jax arrays are registered as pytrees (static config
+in the aux data) so they can cross ``jax.jit`` boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jnp.ndarray
+
+#: Default list-prefix depth (rows per dimension). Calibrated on the
+#: benchmark catalogues: exact TA/BTA terminate at list depth ~200-600
+#: for M up to 256k, so 2048 covers virtually every scan while costing
+#: 4*R*2048*R words of prefix tiles (~34 MB at R=32: row AND rank
+#: tiles, head + tail each) plus M*R int32 for ``rank_by_item``.
+DEFAULT_PREFIX_DEPTH = 2048
+
+#: Smallest catalogue for which the list_major layout is enabled BY
+#: DEFAULT. The prefix trades ~2x streamed bytes (head + tail direction
+#: tiles) for zero gathers; below this size the whole catalogue is
+#: cache-resident and the plain gather path is faster (measured at
+#: M=8k: layout 2x slower; at M=32k it already wins). An explicit
+#: ``EngineContext(prefix_depth=...)`` overrides the threshold.
+LIST_LAYOUT_MIN_TARGETS = 32768
+
+
+@dataclasses.dataclass(frozen=True)
+class RowMajorLayout:
+    """The catalogue exactly as given; scoring a block is a row gather."""
+
+    targets: Array
+
+    name = "row_major"
+
+
+@dataclasses.dataclass(frozen=True)
+class NormMajorLayout:
+    """Decreasing-norm permutation: a norm block is a contiguous slice."""
+
+    norm_order: Array       # [M] int32 — item ids by decreasing L2 norm
+    norms_sorted: Array     # [M] — norms in that order
+    targets_by_norm: Array  # [M, R] — catalogue permuted into that order
+
+    name = "norm_major"
+
+
+@dataclasses.dataclass(frozen=True)
+class ListMajorLayout:
+    """Contiguous list prefixes for gather-free TA/BTA (DESIGN.md §7).
+
+    Attributes:
+      head_rows: ``[R, P, R]`` — ``targets[order_desc[r, p]]`` for
+        p < P: the DESCENDING walk's prefix, contiguous per dimension.
+      tail_rows: ``[R, P, R]`` — the ASCENDING walk's prefix
+        (``targets[order_desc[r, M-1-p]]``), what a negative query
+        weight reads.
+      head_ids / tail_ids: ``[R, P]`` int32 — the walk-order item ids
+        (slicing these replaces the per-step ``take_along_axis`` id
+        gather inside the prefix).
+      head_ranks / tail_ranks: ``[R, P, R]`` int32 —
+        ``rank_by_item[head_ids]`` / ``rank_by_item[tail_ids]``: each
+        prefix item's positions in ALL lists, materialised offline in
+        walk order. Freshness inside the prefix is then a contiguous
+        slice + vectorised min per step — no per-query scatter, no
+        per-candidate gather (both measured to dominate the scan
+        otherwise).
+      rank_by_item: ``[M, R]`` int32 — ``rank_desc`` transposed so one
+        item's positions in ALL lists are a contiguous row; the
+        post-prefix freshness fallback gathers these instead of
+        depending on an O(R*M) per-query key precompute.
+      prefix_depth: P (static).
+    """
+
+    head_rows: Array
+    tail_rows: Array
+    head_ids: Array
+    tail_ids: Array
+    head_ranks: Array
+    tail_ranks: Array
+    rank_by_item: Array
+    prefix_depth: int
+
+    name = "list_major"
+
+    def prefix_steps(self, block_size: int) -> int:
+        """Whole blocks of ``block_size`` covered by the prefix."""
+        return self.prefix_depth // max(block_size, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedNormLayout:
+    """Round-robin-dealt norm-major layout over a mesh axis.
+
+    The arrays are shard-major: rows ``[s*m_local, (s+1)*m_local)`` are
+    shard s's slab, itself in decreasing-norm order (a strided deal of
+    the global norm order, so every shard sees the global spectrum
+    decimated — per-shard Cauchy-Schwarz bounds stay tight everywhere).
+    Slabs are padded to equal length with zero rows carrying id -1.
+    """
+
+    targets_sharded: Array  # [n*m_local, R]
+    norms_sharded: Array    # [n*m_local]
+    ids_sharded: Array      # [n*m_local] int32; -1 marks padding
+    n_shards: int
+
+    name = "norm_sharded"
+
+
+def _register(cls, static_fields):
+    array_fields = [f.name for f in dataclasses.fields(cls)
+                    if f.name not in static_fields]
+
+    def flatten(obj):
+        return ([getattr(obj, f) for f in array_fields],
+                tuple(getattr(obj, f) for f in static_fields))
+
+    def unflatten(aux, children):
+        return cls(**dict(zip(array_fields, children)),
+                   **dict(zip(static_fields, aux)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+_register(RowMajorLayout, ())
+_register(NormMajorLayout, ())
+_register(ListMajorLayout, ("prefix_depth",))
+_register(ShardedNormLayout, ("n_shards",))
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build_row_major(targets, index=None, **_) -> RowMajorLayout:
+    return RowMajorLayout(targets=jnp.asarray(targets, jnp.float32))
+
+
+def build_norm_major(targets, index=None, **_) -> NormMajorLayout:
+    """Norm-major layout; reuses the index's norm arrays when available."""
+    if index is not None:
+        return NormMajorLayout(
+            norm_order=index.norm_order,
+            norms_sorted=index.norms_sorted,
+            targets_by_norm=index.targets_by_norm)
+    T_np = np.asarray(targets, np.float32)
+    norms = np.linalg.norm(T_np, axis=1)
+    order = np.argsort(-norms, kind="stable").astype(np.int32)
+    return NormMajorLayout(
+        norm_order=jnp.asarray(order),
+        norms_sorted=jnp.asarray(norms[order].astype(np.float32)),
+        targets_by_norm=jnp.asarray(
+            np.ascontiguousarray(T_np[order].astype(np.float32))))
+
+
+def build_list_major(targets, index, prefix_depth: Optional[int] = None,
+                     **_) -> ListMajorLayout:
+    """Materialise the list prefixes (offline, ``O(R * P * R)`` copy)."""
+    T_np = np.asarray(targets, np.float32)
+    M, R = T_np.shape
+    P = int(min(M, DEFAULT_PREFIX_DEPTH if prefix_depth is None
+                else prefix_depth))
+    P = max(P, 1)
+    od = np.asarray(index.order_desc)                       # [R, M]
+    head_ids = np.ascontiguousarray(od[:, :P])
+    tail_ids = np.ascontiguousarray(od[:, ::-1][:, :P])
+    rank_by_item = np.ascontiguousarray(np.asarray(index.rank_desc).T)
+    return ListMajorLayout(
+        head_rows=jnp.asarray(np.ascontiguousarray(T_np[head_ids])),
+        tail_rows=jnp.asarray(np.ascontiguousarray(T_np[tail_ids])),
+        head_ids=jnp.asarray(head_ids),
+        tail_ids=jnp.asarray(tail_ids),
+        head_ranks=jnp.asarray(np.ascontiguousarray(rank_by_item[head_ids])),
+        tail_ranks=jnp.asarray(np.ascontiguousarray(rank_by_item[tail_ids])),
+        rank_by_item=jnp.asarray(rank_by_item),
+        prefix_depth=P,
+    )
+
+
+def build_norm_sharded(targets, index, n_shards: int, mesh=None,
+                       axis_name: str = "data", **_) -> ShardedNormLayout:
+    """Deal the norm order round-robin over ``n_shards`` equal slabs."""
+    T_np = np.asarray(targets, np.float32)
+    M, R = T_np.shape
+    if index is not None:
+        order = np.asarray(index.norm_order)
+        norms = np.asarray(index.norms_sorted)
+    else:
+        n = np.linalg.norm(T_np, axis=1)
+        order = np.argsort(-n, kind="stable").astype(np.int32)
+        norms = n[order]
+    m_local = -(-M // n_shards)
+    T_sh = np.zeros((n_shards * m_local, R), np.float32)
+    norms_sh = np.zeros((n_shards * m_local,), np.float32)
+    ids_sh = np.full((n_shards * m_local,), -1, np.int32)
+    for s in range(n_shards):
+        ids_s = order[s::n_shards]
+        T_sh[s * m_local: s * m_local + len(ids_s)] = T_np[ids_s]
+        norms_sh[s * m_local: s * m_local + len(ids_s)] = norms[s::n_shards]
+        ids_sh[s * m_local: s * m_local + len(ids_s)] = ids_s
+    arrays = (jnp.asarray(T_sh), jnp.asarray(norms_sh), jnp.asarray(ids_sh))
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P_
+        row_spec = NamedSharding(mesh, P_(axis_name))
+        mat_spec = NamedSharding(mesh, P_(axis_name, None))
+        arrays = (jax.device_put(arrays[0], mat_spec),
+                  jax.device_put(arrays[1], row_spec),
+                  jax.device_put(arrays[2], row_spec))
+    return ShardedNormLayout(targets_sharded=arrays[0],
+                             norms_sharded=arrays[1],
+                             ids_sharded=arrays[2], n_shards=n_shards)
+
+
+_BUILDERS = {
+    "row_major": build_row_major,
+    "norm_major": build_norm_major,
+    "list_major": build_list_major,
+    "norm_sharded": build_norm_sharded,
+}
+
+
+def layout_names():
+    return sorted(_BUILDERS)
+
+
+def build_layout(name: str, targets, index=None, **params):
+    """Name-keyed layout construction (the registry's single entry point)."""
+    if name not in _BUILDERS:
+        raise ValueError(
+            f"unknown layout {name!r}; known: {layout_names()}")
+    return _BUILDERS[name](targets, index, **params)

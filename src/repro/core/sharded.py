@@ -1,7 +1,7 @@
 """Distributed exact top-K over a sharded catalogue (pod-scale serving).
 
 The catalogue ``T`` is row-sharded over one or more mesh axes (DESIGN.md §5).
-Three exact strategies, all returning the identical set as the unsharded
+Four exact strategies, all returning the identical set as the unsharded
 algorithms (global top-K is always contained in the union of per-shard
 top-Ks):
 
@@ -21,8 +21,18 @@ top-Ks):
 3. ``hierarchical_merge`` — tree merge over multiple mesh axes (pod, data)
    so the cross-DCI hop only ever carries ``K`` candidates per pod.
 
-All functions are written with ``jax.shard_map`` and are used by the
-serving layer (`repro.serving`) and the retrieval_cand dry-run cells.
+4. ``sharded_norm_topk`` — the shared-tile batched norm scan
+   (DESIGN.md §6) run per shard over a round-robin-dealt norm layout
+   (:class:`repro.core.layout.ShardedNormLayout`), with cross-shard
+   ``pmax`` threshold tightening after every block: each shard prunes
+   against the GLOBAL K-th best, so all shards stop as soon as the
+   globally-found top-K certifies their remaining norm blocks
+   irrelevant. Backs the ``norm_sharded`` registry engine.
+
+All functions are written with ``shard_map`` (via :func:`compat_shard_map`,
+which bridges the ``jax.shard_map`` / ``jax.experimental.shard_map`` API
+split across jax versions) and are used by the serving layer
+(`repro.serving`) and the retrieval_cand dry-run cells.
 """
 
 from __future__ import annotations
@@ -34,11 +44,29 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.driver import _dedup_first_occurrence
+from repro.core.driver import (_dedup_first_occurrence,
+                               merge_block_into_carry_batched)
 from repro.core.naive import TopKResult
 
 Array = jnp.ndarray
 NEG_INF = float("-inf")
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """``shard_map`` across the jax API split.
+
+    Newer jax exposes ``jax.shard_map`` (replication checking flag
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (flag ``check_rep``). Checking is disabled either way: every function
+    here all-gathers before returning, so outputs are replicated by
+    construction.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)
 
 
 def _axis_size(axis_names: Sequence[str]) -> Array:
@@ -69,11 +97,9 @@ def sharded_naive_topk(mesh, T_spec: P, axis_names: Sequence[str]):
 
     def fn(T: Array, U: Array, k: int) -> TopKResult:
         @functools.partial(
-            jax.shard_map,
-            mesh=mesh,
+            compat_shard_map, mesh=mesh,
             in_specs=(T_spec, P()),
             out_specs=(P(), P(), P(), P()),
-            check_vma=False,  # outputs are replicated post all-gather merge
         )
         def _local(T_local, U_rep):
             m_local = T_local.shape[0]
@@ -114,11 +140,9 @@ def sharded_blocked_topk(mesh, specs, axis_names: Sequence[str]):
 
     def fn(T, order_desc, t_sorted_desc, U, k: int, block_size: int = 512):
         @functools.partial(
-            jax.shard_map,
-            mesh=mesh,
+            compat_shard_map, mesh=mesh,
             in_specs=(T_spec, order_spec, tsorted_spec, P()),
             out_specs=(P(), P(), P(), P()),
-            check_vma=False,  # outputs are replicated post all-gather merge
         )
         def _local(T_l, order_l, tsort_l, U_rep):
             m_local, r = T_l.shape
@@ -214,10 +238,9 @@ def hierarchical_merge_topk(mesh, T_spec: P, inner_axes: Sequence[str],
 
     def fn(T: Array, U: Array, k: int) -> TopKResult:
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            compat_shard_map, mesh=mesh,
             in_specs=(T_spec, P()),
             out_specs=(P(), P(), P(), P()),
-            check_vma=False,  # outputs are replicated post all-gather merge
         )
         def _local(T_local, U_rep):
             m_local = T_local.shape[0]
@@ -243,5 +266,124 @@ def hierarchical_merge_topk(mesh, T_spec: P, inner_axes: Sequence[str],
             return fvals, fidx, n, jnp.zeros((b,), jnp.int32)
 
         return TopKResult(*_local(T, U))
+
+    return fn
+
+
+def sharded_norm_topk(mesh, axis_names: Sequence[str]):
+    """Sharded shared-tile norm scan with cross-shard threshold tightening.
+
+    Builder for the ``norm_sharded`` engine: returns
+    ``f(T_sh, norms_sh, ids_sh, U, k, block_size, max_blocks)`` operating
+    on a :class:`repro.core.layout.ShardedNormLayout`'s arrays (shard-major
+    slabs of the round-robin-dealt norm order; rows with id -1 are
+    padding). Per shard the loop is exactly the batched-native norm scan
+    (one contiguous ``[block, R]`` tile + one ``[B, R] @ [R, block]``
+    matmul per step for the whole batch, DESIGN.md §6); after every block
+    the per-shard K-th-best lower bounds are ``pmax``-combined so each
+    shard prunes against the GLOBAL K-th best. Because the deal is
+    strided, every shard's local norm spectrum mirrors the global one and
+    all shards certify at nearly the same block depth — the lockstep
+    collective loop wastes almost nothing.
+
+    Exactness: an item not yet enumerated on shard s is bounded by
+    ``||u|| * next_local_norm(s) <= global lower bound`` at that shard's
+    stop, so it cannot enter the global top-K; the final merge
+    all-gathers only ``P * K`` candidates (values + GLOBAL catalogue
+    ids), never rows.
+    """
+    axis_names = tuple(axis_names)
+
+    def fn(T_sh: Array, norms_sh: Array, ids_sh: Array, U: Array, k: int,
+           block_size: int = 256, max_blocks: int = -1) -> TopKResult:
+        @functools.partial(
+            compat_shard_map, mesh=mesh,
+            in_specs=(P(axis_names, None), P(axis_names), P(axis_names),
+                      P()),
+            out_specs=(P(), P(), P(), P()),
+        )
+        def _local(T_l, norms_l, ids_l, U_rep):
+            m_local, r = T_l.shape
+            B = U_rep.shape[0]
+            kk = min(k, m_local)
+            blk = min(block_size, m_local)
+            n_steps = -(-m_local // blk)
+            cap = n_steps if max_blocks < 0 else min(max_blocks, n_steps)
+            u_norms = jnp.linalg.norm(U_rep, axis=1)          # [B]
+            next_starts = jnp.minimum(
+                (jnp.arange(n_steps, dtype=jnp.int32) + 1) * blk,
+                m_local - 1)
+            bound_norms = norms_l[next_starts]                # [n_steps]
+            offs = jnp.arange(blk, dtype=jnp.int32)
+            neg_inf = jnp.asarray(NEG_INF, T_l.dtype)
+
+            def cond(s):
+                return s[-1]
+
+            def body(s):
+                step, tv, ti, ns, dp, lower, upper, _ = s
+                live = lower < upper                          # [B]
+                d0 = step * blk
+                start = jnp.maximum(0, jnp.minimum(d0, m_local - blk))
+                tile = jax.lax.dynamic_slice_in_dim(T_l, start, blk)
+                scores = U_rep @ tile.T                       # [B, blk]
+                rows = start + offs
+                # tail block slides back (mask re-reads) + padding rows
+                valid = jnp.logical_and(rows >= d0, ids_l[rows] >= 0)
+                masked = jnp.where(valid[None, :], scores, neg_inf)
+                nv, ni = merge_block_into_carry_batched(
+                    tv, ti, masked, rows, kk)
+                gate = live[:, None]
+                tv = jnp.where(gate, nv, tv)
+                ti = jnp.where(gate, ni, ti)
+                ns = jnp.where(live,
+                               ns + jnp.sum(valid).astype(jnp.int32), ns)
+                dp = jnp.where(live, dp + 1, dp)
+                upper = jnp.where(live, u_norms * bound_norms[step], upper)
+                # cross-shard tightening: the global K-th best >= the max
+                # of local K-th bests — a valid (conservative) global
+                # lower bound for every shard's pruning test
+                local_kth = tv[:, kk - 1]
+                glob = local_kth
+                for a in axis_names:
+                    glob = jax.lax.pmax(glob, a)
+                lower = jnp.maximum(lower, glob)
+                shard_active = jnp.logical_and(step + 1 < cap,
+                                               jnp.any(lower < upper))
+                any_active = shard_active
+                for a in axis_names:
+                    any_active = jax.lax.pmax(any_active, a)
+                return (step + 1, tv, ti, ns, dp, lower, upper, any_active)
+
+            state = (jnp.int32(0),
+                     jnp.full((B, kk), NEG_INF, T_l.dtype),
+                     jnp.full((B, kk), -1, jnp.int32),
+                     jnp.zeros((B,), jnp.int32),
+                     jnp.zeros((B,), jnp.int32),
+                     jnp.full((B,), NEG_INF, T_l.dtype),
+                     jnp.full((B,), jnp.inf, T_l.dtype),
+                     jnp.asarray(cap > 0))
+            _, tv, ti, ns, dp, _, _, _ = jax.lax.while_loop(cond, body,
+                                                            state)
+            # local rows -> GLOBAL catalogue ids, then the P*K merge
+            gids = jnp.where(ti >= 0,
+                             ids_l[jnp.clip(ti, 0, m_local - 1)], -1)
+            vals = tv
+            for a in axis_names:
+                vals = jax.lax.all_gather(vals, a, axis=1, tiled=True)
+                gids = jax.lax.all_gather(gids, a, axis=1, tiled=True)
+                ns = jax.lax.psum(ns, a)
+                dp = jax.lax.psum(dp, a)
+            width = vals.shape[1]
+            if width < k:
+                vals = jnp.concatenate(
+                    [vals, jnp.full((B, k - width), NEG_INF, vals.dtype)], 1)
+                gids = jnp.concatenate(
+                    [gids, jnp.full((B, k - width), -1, gids.dtype)], 1)
+            fvals, fpos = jax.lax.top_k(vals, k)
+            fidx = jnp.take_along_axis(gids, fpos, axis=1)
+            return fvals, fidx, ns, dp * blk
+
+        return TopKResult(*_local(T_sh, norms_sh, ids_sh, U))
 
     return fn

@@ -1,25 +1,35 @@
-"""The three built-in scan strategies (DESIGN.md §2).
+"""The built-in scan strategies (DESIGN.md §2).
 
-Each constructor closes over the catalogue index arrays and one query and
-returns a :class:`repro.core.driver.ScanStrategy` for
+Each constructor closes over the catalogue index/layout arrays and one
+query and returns a :class:`repro.core.driver.ScanStrategy` for
 :func:`repro.core.driver.pruned_block_scan`:
 
-* :func:`ta_round_strategy` — the paper's Algorithm 2 round structure over
-  the per-query *flipped views* (one list depth per step).
+* :func:`ta_round_strategy` — the paper's Algorithm 2 round structure
+  (one list depth per step). Negative query weights are resolved by
+  INDEX ARITHMETIC (depth d of list r reads column ``M-1-d`` when
+  ``u_r < 0``), never by materialising flipped ``[R, M]`` copies.
 * :func:`blocked_lists_strategy` — the Block Threshold Algorithm: a depth
   block of ``B`` entries from all R lists per step, with the sign flip
   applied on the gather side (``block_size=1`` recovers TA rounds exactly,
   id-for-id and bound-for-bound).
+* :func:`list_prefix_strategy` — the same enumeration over the
+  contiguous :class:`repro.core.layout.ListMajorLayout` prefix: scoring
+  is a ``[R, B, R]`` slice + matmul (no row gathers), candidate ids are
+  slices of the walk-order id tables, and freshness comes from one
+  O(R*P) per-query scatter instead of the O(R*M) key precompute. Covers
+  depths ``< prefix_depth``; a scan that outlives the prefix chains into
+  a gather-side :func:`blocked_lists_strategy` tail (DESIGN.md §7).
 * :func:`norm_block_strategy` — contiguous blocks in decreasing-norm order
   bounded by Cauchy-Schwarz (the layout the Pallas backend consumes).
 
-All three leave ``ScanStrategy.score`` as the default dense gather +
-matvec; a future partial-scoring strategy (paper Alg. 3) plugs in there.
+The list strategies leave ``ScanStrategy.score`` as the default dense
+gather + matvec unless a layout or an explicit ``score_fn`` (e.g. the
+Pallas gather-fused kernel) supplies a cheaper path.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,34 +38,65 @@ from repro.core.driver import ScanStrategy
 
 Array = jnp.ndarray
 
+_INT_MAX = 2147483647
+
+
+def _keys_from_ranks(ranks: Array, u: Array, m: int) -> Array:
+    """Round-major first-occurrence keys from a ``[..., R]`` rank array.
+
+    THE single implementation of the freshness-key formula. The
+    sequential scan enumerates ROUND-major (depth d, then list r), so an
+    item's first enumeration is the minimum of ``pos_r(y) * R + r`` over
+    its active lists, where ``pos_r`` is the walk position in list r's
+    per-query view (``m-1-rank`` when ``u_r < 0`` — the same flip
+    ``query_views`` reports). Inactive (zero-weight) lists are masked to
+    int32 max. A slot ``(r, d)`` is fresh iff ``first_key[id] == d*R+r``.
+    This invariant is load-bearing for count-faithfulness: every
+    freshness path — the O(R*M) per-query precompute, the tail's
+    per-block row gather, and the prefix's offline rank tiles — must
+    compute bit-identical keys, so they all route through here.
+    """
+    R = ranks.shape[-1]
+    shape = (1,) * (ranks.ndim - 1) + (R,)
+    pos = jnp.where((u < 0).reshape(shape), m - 1 - ranks, ranks)
+    keys = pos * R + jnp.arange(R, dtype=jnp.int32).reshape(shape)
+    keys = jnp.where((u != 0).reshape(shape), keys, _INT_MAX)
+    return jnp.min(keys, axis=-1)                                # [...]
+
 
 def _first_occurrence_keys(rank_desc: Array, u: Array) -> Array:
-    """Per-item minimum enumeration key for cursor-based freshness.
-
-    The sequential scan enumerates ROUND-major (depth d, then list r), so
-    an item's first enumeration is the minimum of ``pos_r(y) * R + r``
-    over its active lists, where ``pos_r`` is the walk position in list
-    r's per-query view (``M-1-rank`` when ``u_r < 0`` — the same flip
-    ``query_views`` applies). Inactive (zero-weight) lists are masked to
-    int32 max. A slot ``(r, d)`` is fresh iff ``first_key[id] == d*R+r``.
-    This invariant is load-bearing for count-faithfulness — both list
-    strategies must share it.
-    """
+    """Per-item keys for the whole catalogue (O(R*M) per-query precompute,
+    the non-layout gather path's freshness table)."""
     R, M = rank_desc.shape
-    pos = jnp.where((u < 0)[:, None], M - 1 - rank_desc, rank_desc)
-    key = pos * R + jnp.arange(R, dtype=jnp.int32)[:, None]
-    key = jnp.where((u != 0)[:, None], key, jnp.iinfo(jnp.int32).max)
-    return jnp.min(key, axis=0)                                  # [M]
+    return _keys_from_ranks(rank_desc.T, u, M)                   # [M]
 
 
-def ta_round_strategy(order: Array, t_sorted: Array, u: Array,
+def rank_gather_first_keys(rank_by_item: Array, u: Array,
+                           ids: Array) -> Array:
+    """Keys for ONE block of candidates, by row gather.
+
+    Computed only for the ``C`` candidates at hand from the transposed
+    inverse permutations
+    (:attr:`repro.core.layout.ListMajorLayout.rank_by_item`, ``[M, R]``):
+    a ``[C, R]`` int gather per block instead of an O(R*M) per-query
+    precompute. Used by the post-prefix tail of the layout path, where
+    blocks are rare (DESIGN.md §7).
+    """
+    M, R = rank_by_item.shape
+    return _keys_from_ranks(rank_by_item[ids], u, M)             # [C]
+
+
+def ta_round_strategy(order_desc: Array, t_sorted_desc: Array, u: Array,
                       rank_desc: Optional[Array] = None) -> ScanStrategy:
-    """Paper-faithful TA rounds over pre-flipped per-query views.
+    """Paper-faithful TA rounds with gather-side direction resolution.
 
     Args:
-      order / t_sorted: ``[R, M]`` views from
-        :meth:`repro.core.index.TopKIndex.query_views` — already walking in
-        decreasing ``u_r * t_r`` order for every list.
+      order_desc / t_sorted_desc: the query-independent ``[R, M]`` index
+        arrays (:meth:`repro.core.index.TopKIndex.query_views` returns
+        them untouched plus the direction flags). Walk depth ``d`` of
+        list ``r`` reads column ``M-1-d`` when ``u_r < 0`` — an O(R)
+        index transform per round, replacing the two O(R*M) flipped
+        copies the pre-flip views used to materialise per query.
       u: ``[R]`` query.
       rank_desc: optional ``[R, M]`` inverse permutations
         (:attr:`repro.core.index.TopKIndex.rank_desc`). When given,
@@ -63,16 +104,20 @@ def ta_round_strategy(order: Array, t_sorted: Array, u: Array,
         blocked strategy) and the driver drops the O(M) visited bitmap
         from the loop carry — identical results and counts.
     """
-    R, M = order.shape
+    R, M = order_desc.shape
+    neg = u < 0
     active = u != 0  # sparse queries: zero-weight lists are never walked
+    rows_r = jnp.arange(R, dtype=jnp.int32)
 
     def candidates(step):
-        ids = jax.lax.dynamic_slice_in_dim(order, step, 1, axis=1)[:, 0]
+        cols = jnp.where(neg, M - 1 - step, step)
+        ids = order_desc[rows_r, cols]
         return ids, active
 
     def bound(step):
         # Eq. 3 at the depth just consumed
-        t_at = jax.lax.dynamic_slice_in_dim(t_sorted, step, 1, axis=1)[:, 0]
+        cols = jnp.where(neg, M - 1 - step, step)
+        t_at = t_sorted_desc[rows_r, cols]
         return jnp.sum(u * t_at)
 
     fresh_mask = None
@@ -95,6 +140,8 @@ def blocked_lists_strategy(
     block_size: int,
     rank_desc: Optional[Array] = None,
     ta_rounds: bool = False,
+    rank_by_item: Optional[Array] = None,
+    score_fn: Optional[Callable[[Array], Array]] = None,
 ) -> ScanStrategy:
     """BTA enumeration: ``R * block_size`` candidates per step.
 
@@ -115,7 +162,16 @@ def blocked_lists_strategy(
         sequential TA round (chunked TA): per-round Eq. 3 bounds and the
         driver's prefix masking keep ``n_scored``/``depth`` identical to
         the item-at-a-time paper algorithm while the gather + matvec stay
-        block-shaped. Requires ``rank_desc``.
+        block-shaped. Requires ``rank_desc`` or ``rank_by_item``.
+      rank_by_item: optional ``[M, R]`` transposed inverse permutations
+        (:attr:`repro.core.layout.ListMajorLayout.rank_by_item`).
+        Freshness then comes from a per-block ``[C, R]`` row gather
+        (:func:`rank_gather_first_keys`) instead of the O(R*M) per-query
+        key precompute — the right trade when this strategy is only the
+        rare post-prefix TAIL of a layout scan (DESIGN.md §7). Takes
+        precedence over ``rank_desc``.
+      score_fn: optional ``ids -> scores`` override (e.g. the Pallas
+        gather-fused scorer) replacing the default ``targets[ids] @ u``.
     """
     R, M = order_desc.shape
     neg = u < 0
@@ -149,36 +205,153 @@ def blocked_lists_strategy(
         return jnp.sum(u[:, None] * t_at, axis=0)                   # [B]
 
     fresh_mask = None
-    if rank_desc is not None:
+    if rank_by_item is not None or rank_desc is not None:
         # Round-major first-occurrence keys: also the slot the sequential
         # oracle scores an item at (this matters for chunked TA's
         # per-round counts; for the block-granular scan any slot of the
         # item's first block would do, and the minimum is in that block
         # either way).
-        first_key = _first_occurrence_keys(rank_desc, u)
         slot_r = jnp.repeat(jnp.arange(R, dtype=jnp.int32), block_size,
                             total_repeat_length=R * block_size)
         slot_depth = jnp.tile(offs, R)                               # [R*B]
+        if rank_by_item is not None:
+            def fresh_mask(step, ids, active_slots):
+                fk = rank_gather_first_keys(rank_by_item, u, ids)
+                d = step * block_size + slot_depth  # unclamped true depth
+                sk = d * R + slot_r
+                return jnp.logical_and(
+                    jnp.logical_and(active_slots, fk == sk), d < M)
+        else:
+            first_key = _first_occurrence_keys(rank_desc, u)
 
-        def fresh_mask(step, ids, active_slots):
-            d = step * block_size + slot_depth      # unclamped true depth
-            sk = d * R + slot_r
-            return jnp.logical_and(
-                jnp.logical_and(active_slots, first_key[ids] == sk), d < M)
+            def fresh_mask(step, ids, active_slots):
+                d = step * block_size + slot_depth  # unclamped true depth
+                sk = d * R + slot_r
+                return jnp.logical_and(
+                    jnp.logical_and(active_slots, first_key[ids] == sk),
+                    d < M)
+
+    score = None
+    if score_fn is not None:
+        def score(step, ids, active_slots):
+            return score_fn(ids)
 
     if ta_rounds and block_size > 1:
         # block_size == 1 falls through: one round per step IS the plain
         # blocked strategy, and the driver's scalar-bound path handles it.
-        if rank_desc is None:
-            raise ValueError("ta_rounds (chunked TA) requires rank_desc")
+        if fresh_mask is None:
+            raise ValueError(
+                "ta_rounds (chunked TA) requires rank_desc or rank_by_item")
         return ScanStrategy(candidates=candidates, bound=round_bounds,
                             num_steps=-(-M // block_size),
                             track_visited=False, fresh_mask=fresh_mask,
+                            score=score,
                             rounds_per_step=block_size, num_rounds=M)
     return ScanStrategy(candidates=candidates, bound=block_bound,
                         num_steps=-(-M // block_size),
                         track_visited=fresh_mask is None,
-                        fresh_mask=fresh_mask)
+                        fresh_mask=fresh_mask, score=score)
+
+
+def list_prefix_strategy(
+    layout,
+    t_sorted_desc: Array,
+    u: Array,
+    block_size: int,
+    ta_rounds: bool = False,
+) -> ScanStrategy:
+    """Gather-free TA/BTA enumeration over the contiguous list prefix.
+
+    Block ``step`` covers depths ``[step*B, (step+1)*B)`` of every list —
+    the same candidates, bounds, and freshness keys as
+    :func:`blocked_lists_strategy`, but every memory access inside the
+    prefix is CONTIGUOUS (DESIGN.md §7):
+
+    * scoring slices ``[R, B, R]`` tiles of the layout's ``head_rows``
+      (descending walks) and ``tail_rows`` (ascending walks, i.e.
+      negative query weights), selects per-list by the direction flag,
+      and runs one ``[R*B, R] @ [R]`` matvec — no row gather;
+    * candidate ids are slices of the walk-order id tables;
+    * freshness slices the pre-materialised rank tiles
+      (``head_ranks``/``tail_ranks``: each prefix item's positions in
+      ALL lists, in walk order) and reduces them to round-major
+      first-occurrence keys with a vectorised min — per-STEP O(C*R)
+      arithmetic on contiguous memory, replacing both the O(R*M)
+      per-query key precompute and any scatter/gather (a batched
+      scatter-min was measured to dominate the whole scan on XLA:CPU).
+
+    Covers ``layout.prefix_steps(block_size)`` blocks; the caller chains
+    a gather-side tail via the driver's ``init_state`` for the rare scan
+    that outlives the prefix.
+
+    Args:
+      layout: a :class:`repro.core.layout.ListMajorLayout`.
+      t_sorted_desc: ``[R, M]`` sorted values (bounds only).
+      ta_rounds: chunked-TA mode, as in :func:`blocked_lists_strategy`
+        (``num_rounds`` is capped at the prefix depth).
+    """
+    R, P = layout.head_ids.shape
+    M = layout.rank_by_item.shape[0]
+    neg = u < 0
+    active = u != 0
+    n_steps = layout.prefix_steps(block_size)
+    active_rep = jnp.repeat(active, block_size,
+                            total_repeat_length=R * block_size)
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+
+    def _dir_slice(head, tail, step):
+        """[R, B, ...] walk-order tile: head for positive lists, tail for
+        negative — two contiguous slices + one select, never a gather."""
+        d0 = step * block_size
+        sizes = (R, block_size) + head.shape[2:]
+        h = jax.lax.dynamic_slice(head, (0, d0) + (0,) * (head.ndim - 2),
+                                  sizes)
+        t = jax.lax.dynamic_slice(tail, (0, d0) + (0,) * (tail.ndim - 2),
+                                  sizes)
+        return jnp.where(neg.reshape((R,) + (1,) * (head.ndim - 1)), t, h)
+
+    def candidates(step):
+        ids = _dir_slice(layout.head_ids, layout.tail_ids, step)
+        return ids.reshape(-1), active_rep
+
+    def score(step, ids, active_slots):
+        tile = _dir_slice(layout.head_rows, layout.tail_rows, step)
+        return tile.reshape(R * block_size, -1) @ u
+
+    # round-major first-occurrence keys from the pre-materialised rank
+    # tiles: ranks[r, j, r'] is candidate (r, j)'s position in list r'
+    slot_key = (jnp.arange(block_size, dtype=jnp.int32)[None, :] * R
+                + jnp.arange(R, dtype=jnp.int32)[:, None])      # [R, B]
+
+    def fresh_mask(step, ids, active_slots):
+        ranks = _dir_slice(layout.head_ranks, layout.tail_ranks, step)
+        fk = _keys_from_ranks(ranks, u, M)                      # [R, B]
+        d0 = step * block_size
+        return jnp.logical_and(active[:, None],
+                               fk == d0 * R + slot_key).reshape(-1)
+
+    def block_bound(step):
+        # prefix steps never clamp: d0 + B - 1 < P <= M
+        end = step * block_size + block_size - 1
+        end_eff = jnp.where(neg, M - 1 - end, end)
+        t_end = t_sorted_desc[jnp.arange(R), end_eff]
+        return jnp.sum(u * t_end)
+
+    def round_bounds(step):
+        d = step * block_size + offs                                # [B]
+        d_eff = jnp.where(neg[:, None], M - 1 - d[None, :], d[None, :])
+        t_at = jnp.take_along_axis(t_sorted_desc, d_eff, axis=1)    # [R, B]
+        return jnp.sum(u[:, None] * t_at, axis=0)                   # [B]
+
+    if ta_rounds and block_size > 1:
+        return ScanStrategy(candidates=candidates, bound=round_bounds,
+                            num_steps=n_steps, track_visited=False,
+                            fresh_mask=fresh_mask, score=score,
+                            rounds_per_step=block_size,
+                            num_rounds=n_steps * block_size)
+    return ScanStrategy(candidates=candidates, bound=block_bound,
+                        num_steps=n_steps, track_visited=False,
+                        fresh_mask=fresh_mask, score=score)
 
 
 def norm_block_strategy(

@@ -146,8 +146,11 @@ def threshold_topk(
 
     Args:
       targets: ``[M, R]``.
-      order / t_sorted: the per-query views from
-        :meth:`TopKIndex.query_views` — ``[R, M]`` each.
+      order / t_sorted: the query-independent DESCENDING index arrays
+        (``order_desc`` / ``t_sorted_desc``). Negative query weights are
+        resolved inside the strategy by index arithmetic — no per-query
+        flipped copies are materialised (the old pre-flipped views cost
+        two O(R*M) copies per negative-weight query).
       u: ``[R]`` query vector.
       k: top-K size (static).
       max_rounds: optional round budget (static); ``-1`` = exact TA,
@@ -171,6 +174,6 @@ def threshold_topk(
 def threshold_topk_from_index(
     targets: Array, index: TopKIndex, u: Array, k: int, max_rounds: int = -1
 ) -> TopKResult:
-    order, t_sorted = index.query_views(u)
+    order, t_sorted, _ = index.query_views(u)   # direction handled in-strategy
     return threshold_topk(targets, order, t_sorted, u, k, max_rounds,
                           rank_desc=index.rank_desc)

@@ -441,3 +441,54 @@ def topk_mips_pallas_batched_prefetch(T_sorted, tile_bounds, sb_idx, live,
         ],
         interpret=resolve_interpret(interpret),
     )(sb_idx, live, tile_bounds, T_sorted, U[:, :, None])
+
+
+# ---------------------------------------------------------------------------
+# Gather-fused scoring: score scattered rows without materialising the gather
+# ---------------------------------------------------------------------------
+
+
+def _gather_score_kernel(ids_ref, t_row_ref, u_ref, out_ref):
+    # the row DMA'd for this step IS ids[i] (index-map remap below)
+    out_ref[0] = jnp.dot(t_row_ref[0, :], u_ref[:, 0],
+                         preferred_element_type=jnp.float32)
+
+
+def gather_scores_pallas(T, ids, u, interpret=None):
+    """Score ``C`` scattered catalogue rows as one fused kernel.
+
+    ``T: [M, R]``, ``ids: [C] int32`` (need not be distinct, must be in
+    range), ``u: [R]``. Returns ``T[ids] @ u`` — but the gather never
+    materialises ``[C, R]`` in HBM: ``ids`` is a SCALAR-PREFETCH operand
+    and the BlockSpec index map sends grid step ``i`` straight to row
+    ``ids[i]``, so the pipeline DMAs exactly the rows needed, one
+    ``(1, R)`` tile per step, overlapped with the matvec of the previous
+    row. This is the post-prefix TAIL scorer for the list_major layout
+    (DESIGN.md §7): the rare blocks past the prefix are scored without a
+    separate XLA gather kernel and without HBM round-tripping the
+    gathered rows.
+
+    Falls back to the XLA gather+matvec when the installed jax lacks
+    scalar prefetch. Exposed to the strategies through the ``score_fn``
+    hook of :func:`repro.core.strategies.blocked_lists_strategy`.
+    """
+    if not HAS_SCALAR_PREFETCH:
+        return T[ids] @ u
+    C = ids.shape[0]
+    R = T.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda i, ids_: (ids_[i], 0)),    # row
+            pl.BlockSpec((R, 1), lambda i, ids_: (0, 0)),          # u
+        ],
+        out_specs=[pl.BlockSpec((1,), lambda i, ids_: (i,))],
+    )
+    (out,) = pl.pallas_call(
+        _gather_score_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((C,), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(ids, T, u[:, None])
+    return out

@@ -85,7 +85,7 @@ def run_cell(arch_id: str, shape_name: str, mesh_name: str,
             # the roofline table is single-pod only (brief: the multi-pod
             # pass just proves the pod axis shards) -> calibrate single-pod
             if get_arch(arch_id).family == "lm" and mesh_name != "multi":
-                # de-bias the while-body-once cost analysis (DESIGN.md §7)
+                # de-bias the while-body-once cost analysis (DESIGN.md §8)
                 roof = calibrated_roofline(arch_id, shape_name, mesh,
                                            n_chips, cell.model_flops)
             else:

@@ -33,7 +33,7 @@ def main():
     import jax.numpy as jnp
 
     from repro.core import random_model
-    from repro.core.engines import get_engine, list_engines
+    from repro.core.engines import auto_candidates, get_engine, list_engines
     from repro.serving.server import TopKServer
 
     rng = np.random.default_rng(args.seed)
@@ -47,8 +47,11 @@ def main():
         (args.num_queries, args.rank)).astype(np.float32) * spectrum)
 
     if args.engine == "all":
+        # skip the host-only numpy oracles: item-at-a-time python loops
+        # at serving sizes are minutes per batch (they stay reachable by
+        # explicit --engine fagin / partial)
         engines = [e.name for e in list_engines(exact=True)
-                   if e.name != "auto"]
+                   if e.name != "auto" and not e.host_only]
         # naive first: it is the ground-truth reference the others are
         # asserted against
         engines.sort(key=lambda n: n != "naive")
@@ -61,11 +64,15 @@ def main():
     sizes = {min(args.batch, args.num_queries)}
     if args.num_queries % args.batch:
         sizes.add(args.num_queries % args.batch)
-    # auto resolves per batch to any concrete engine — warm them all
-    warm = ([e for e in engines if e != "auto"]
-            or [e.name for e in list_engines(exact=True)
-                if e.backend != "dispatch"])
-    srv.warmup(args.k, batch_sizes=sorted(sizes), engines=warm)
+    # auto resolves per batch to a concrete engine — warm exactly the
+    # candidates its policy can pick (host oracles have no compiled
+    # executable; never warm them)
+    warm = [e for e in engines
+            if e != "auto" and not get_engine(e).host_only]
+    if "auto" in engines:
+        warm = sorted(set(warm) | set(auto_candidates()))
+    if warm:
+        srv.warmup(args.k, batch_sizes=sorted(sizes), engines=warm)
     ref = None
     for eng in engines:
         res = srv.query(U, args.k, method=eng)

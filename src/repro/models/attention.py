@@ -5,7 +5,8 @@ blocks so the [S, S] score matrix is never materialised (the pure-JAX
 analogue of the IO-aware kernel; the Pallas decode kernel lives in
 ``repro.kernels``). Decode attends one query token against a long KV cache —
 linear in context length, which is why the long_500k cells run as decode
-(DESIGN.md §Arch-applicability).
+(DESIGN.md §3: attention itself is not separable; only bilinear
+retrieval heads are SEP-LR catalogues).
 """
 
 from __future__ import annotations

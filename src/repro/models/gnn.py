@@ -18,7 +18,8 @@ Graph batch layout (static shapes, padded):
 Sharding: edges over "dp" (the only axis with enough parallelism for
 message passing), node states replicated per device — segment-sums over a
 sharded edge axis lower to psum. The paper's top-K technique does not
-apply to the message-passing forward (DESIGN.md §Arch-applicability);
+apply to the message-passing forward (DESIGN.md §3: only the bilinear
+retrieval head is a SEP-LR catalogue);
 the optional link-prediction head ``link_scores`` is SEP-LR and routes
 through repro.core.
 """
@@ -167,7 +168,7 @@ def loss_fn(params: Dict, graph: Dict, config: PNAConfig,
 
 def link_scores(params: Dict, h: Array, query_nodes: Array) -> Array:
     """SEP-LR link-prediction head: u = h[q], T = h — exact top-K neighbour
-    retrieval goes through repro.core (DESIGN.md §Arch-applicability)."""
+    retrieval goes through repro.core (DESIGN.md §3)."""
     return jnp.take(h, query_nodes, axis=0) @ h.T
 
 

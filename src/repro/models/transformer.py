@@ -68,7 +68,7 @@ class TransformerConfig:
     logit_chunk: int = 512
     kv_block: int = 512
     # roofline-calibration mode: unroll every scan so cost_analysis counts
-    # loop bodies exactly (XLA counts a while body ONCE; see DESIGN.md §7)
+    # loop bodies exactly (XLA counts a while body ONCE; see DESIGN.md §8)
     unroll: bool = False
 
     @property

@@ -3,8 +3,13 @@
 ``TopKServer`` owns a SEP-LR catalogue plus a shared
 :class:`repro.core.engines.EngineContext` and serves batched queries
 through ANY engine in the registry (``naive`` / ``ta`` / ``bta`` /
-``norm`` / ``pallas`` / ``auto`` — see ``repro.core.engines``), addressed
-by registry name. Requests are micro-batched; per-query pruning statistics
+``norm`` / ``norm_sharded`` / ``pallas`` / ``fagin`` / ``partial`` /
+``auto`` — see ``repro.core.engines``), addressed by registry name; the
+context also owns the catalogue LAYOUTS each engine declares
+(``repro.core.layout``: contiguous list prefixes for ``ta``/``bta``, the
+norm-major tile order for ``norm``/``pallas``, the round-robin-dealt
+sharded norm order for ``norm_sharded``), so one server process serves a
+multi-device mesh by simply passing ``method="norm_sharded"``. Requests are micro-batched; per-query pruning statistics
 (scores computed, depth) are aggregated PER REGISTRY ENGINE for the
 benchmark harness — matching the paper's evaluation axis (query
 efficiency). ``method="auto"`` resolves per batch via

@@ -50,10 +50,21 @@ def _queries(rng, b, r):
 
 def test_registry_contents_and_metadata():
     names = engine_names()
-    for expected in ("naive", "ta", "bta", "norm", "pallas", "auto"):
+    for expected in ("naive", "ta", "bta", "norm", "norm_sharded",
+                     "pallas", "fagin", "partial", "auto"):
         assert expected in names
     assert not get_engine("naive").needs_index
     assert get_engine("pallas").backend == "pallas"
+    # layout declarations (DESIGN.md §7)
+    assert get_engine("ta").layout == "list_major"
+    assert get_engine("bta").layout == "list_major"
+    assert get_engine("norm").layout == "norm_major"
+    assert get_engine("norm_sharded").layout == "norm_sharded"
+    # host-only reference oracles: exact, numpy backend, never jitted
+    for oracle in ("fagin", "partial"):
+        e = get_engine(oracle)
+        assert e.exact and e.host_only and e.backend == "numpy"
+        assert e.make_batched is None and e.dispatch is not None
     # aliases resolve to canonical engines
     assert get_engine("threshold").name == "ta"
     assert get_engine("blocked").name == "bta"
@@ -172,7 +183,7 @@ def test_driver_direct_strategies_agree():
     idx = build_index(T)
     Tj, uj = jnp.asarray(T), jnp.asarray(u)
     ref = np.sort(np.asarray(naive_topk(Tj, uj, 5).values))
-    order, t_sorted = idx.query_views(uj)
+    order, t_sorted, _ = idx.query_views(uj)   # desc arrays + flags
     for strat in (
         ta_round_strategy(order, t_sorted, uj),
         blocked_lists_strategy(idx.order_desc, idx.t_sorted_desc, uj, 8),
@@ -190,7 +201,7 @@ def test_driver_uniform_halting():
     u = rng.standard_normal(12).astype(np.float32)
     idx = build_index(T)
     Tj, uj = jnp.asarray(T), jnp.asarray(u)
-    order, t_sorted = idx.query_views(uj)
+    order, t_sorted, _ = idx.query_views(uj)
     for strat in (
         ta_round_strategy(order, t_sorted, uj),
         blocked_lists_strategy(idx.order_desc, idx.t_sorted_desc, uj, 16),
@@ -270,7 +281,8 @@ def test_repeated_same_shape_calls_do_not_retrace():
     T = rng.standard_normal((600, 16)).astype(np.float32)
     ctx = EngineContext(T, block_size=64)
     U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
-    engines = [e for e in list_engines() if e.backend != "dispatch"]
+    # host-only oracles never trace; dispatch engines have no executable
+    engines = [e for e in list_engines() if e.make_batched is not None]
     for eng in engines:
         eng.run(ctx, U, 5)                   # populates the cache
     warm = dict(ctx.trace_counts)
@@ -359,3 +371,42 @@ def test_pallas_engine_counts_are_block_granular():
     n = np.asarray(res.n_scored)
     assert np.all(n % 64 == 0)
     assert np.all(n < 512)          # the decaying catalogue prunes blocks
+
+
+# ---------------------------------------------------------------------------
+# Host-only reference oracles as registry engines (fagin / partial)
+# ---------------------------------------------------------------------------
+
+
+def test_fagin_engine_matches_ta_values():
+    rng = np.random.default_rng(71)
+    T = rng.standard_normal((140, 9)).astype(np.float32)
+    ctx = EngineContext(T, block_size=16)
+    for regime, U in _queries(rng, 3, 9).items():
+        Uj = jnp.asarray(U)
+        r_ta = get_engine("ta").run(ctx, Uj, 6)
+        r_f = get_engine("fagin").run(ctx, Uj, 6)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(r_f.values), axis=1),
+            np.sort(np.asarray(r_ta.values), axis=1), atol=1e-4,
+            err_msg=regime)
+
+
+def test_partial_engine_item_counts_equal_ta():
+    """Theorem 4 logic: partial TA touches exactly TA's item set, so its
+    n_scored (items touched) equals the ta engine's count-faithful
+    n_scored query for query."""
+    rng = np.random.default_rng(73)
+    T = rng.standard_normal((160, 8)).astype(np.float32)
+    ctx = EngineContext(T, block_size=16)
+    for regime, U in _queries(rng, 3, 8).items():
+        Uj = jnp.asarray(U)
+        r_ta = get_engine("ta").run(ctx, Uj, 5)
+        r_p = get_engine("partial").run(ctx, Uj, 5)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(r_p.values), axis=1),
+            np.sort(np.asarray(r_ta.values), axis=1), atol=1e-4,
+            err_msg=regime)
+        np.testing.assert_array_equal(
+            np.asarray(r_p.n_scored), np.asarray(r_ta.n_scored),
+            err_msg=regime)

@@ -119,3 +119,36 @@ def test_fm_interaction_matches_explicit_pairwise():
         explicit = sum(float(emb[b, i] @ emb[b, j])
                        for i in range(6) for j in range(i + 1, 6))
         assert abs(out[b] - explicit) < 1e-3
+
+
+def test_gather_scores_pallas_matches_xla_gather():
+    """The gather-fused scorer (scalar-prefetch index-map gather) must equal
+    targets[ids] @ u, including repeated ids."""
+    from repro.kernels.topk_mips import gather_scores_pallas
+    rng = np.random.default_rng(21)
+    T = rng.standard_normal((256, 24)).astype(np.float32)
+    u = rng.standard_normal(24).astype(np.float32)
+    ids = np.concatenate([rng.integers(0, 256, 30),
+                          [0, 0, 255, 255]]).astype(np.int32)
+    out = gather_scores_pallas(jnp.asarray(T), jnp.asarray(ids),
+                               jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(out), T[ids] @ u,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gather_scores_pallas_under_jit_and_vmap():
+    """The tail scorer is called inside jitted, vmapped scan bodies — the
+    kernel must survive both transforms."""
+    import jax
+
+    from repro.kernels.topk_mips import gather_scores_pallas
+    rng = np.random.default_rng(22)
+    T = jnp.asarray(rng.standard_normal((64, 8)).astype(np.float32))
+    U = jnp.asarray(rng.standard_normal((3, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, (3, 10)).astype(np.int32))
+    fn = jax.jit(jax.vmap(lambda i, u: gather_scores_pallas(T, i, u)))
+    out = fn(ids, U)
+    ref = np.take(np.asarray(T), np.asarray(ids), axis=0) @ \
+        np.asarray(U)[:, :, None]
+    np.testing.assert_allclose(np.asarray(out), ref[..., 0], atol=1e-4,
+                               rtol=1e-4)

@@ -120,3 +120,31 @@ def test_halted_vs_exact_precision_tradeoff():
     hits = len(set(np.asarray(tiny.indices).tolist())
                & set(np.asarray(exact.indices).tolist()))
     assert hits >= 1          # finds most of the top fast; exactness needs proof rounds
+
+
+def test_server_norm_sharded_method():
+    """norm_sharded is reachable through TopKServer.query by registry name
+    and agrees with the single-host norm engine."""
+    model = random_model(np.random.default_rng(9), 2000, 16,
+                         "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64)
+    U = jnp.asarray(np.random.default_rng(10).standard_normal(
+        (8, 16)).astype(np.float32))
+    r_norm = srv.query(U, 10, "norm")
+    r_sh = srv.query(U, 10, "norm_sharded")
+    np.testing.assert_allclose(np.sort(r_sh.values, axis=1),
+                               np.sort(r_norm.values, axis=1), atol=1e-4)
+    assert srv.stats["norm_sharded"].n_queries == 8
+
+
+def test_server_host_oracle_methods():
+    """The registered numpy reference oracles serve (slowly) by name."""
+    model = random_model(np.random.default_rng(11), 300, 8,
+                         "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=4, block_size=16)
+    U = np.random.default_rng(12).standard_normal((4, 8)).astype(np.float32)
+    r_ta = srv.query(U, 5, "ta")
+    for oracle in ("fagin", "partial"):
+        r = srv.query(U, 5, oracle)
+        np.testing.assert_allclose(np.sort(r.values, axis=1),
+                                   np.sort(r_ta.values, axis=1), atol=1e-4)
