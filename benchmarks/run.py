@@ -18,7 +18,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (bta_tpu, engines, fig1_cf, fig2_multilabel,
-                            fig3_halted, table1_toy, table4_scaling)
+                            fig3_halted, streaming, table1_toy,
+                            table4_scaling)
     mods = {
         "table1_toy": table1_toy,
         "fig1_cf": fig1_cf,
@@ -27,6 +28,7 @@ def main() -> None:
         "table4_scaling": table4_scaling,
         "bta_tpu": bta_tpu,
         "engines": engines,   # sweeps every engine in the registry
+        "streaming": streaming,   # interleaved mutations + queries (§9)
     }
     if args.only:
         mods = {k: v for k, v in mods.items() if k in args.only.split(",")}

@@ -1,0 +1,269 @@
+"""Streaming catalogue sweep: interleaved mutations + queries (DESIGN.md §9).
+
+Measures the segmented (base + delta + tombstone) serving path against the
+only exact alternative a static-index tier has: REBUILD-PER-MUTATION —
+after every mutation call the baseline rebuilds the offline sorted-list
+index + engine context over the live set (the state the paper's pruned
+serving requires), and serves queries through the SAME registry engine
+the segmented server uses. Both sides follow the SAME readiness policy a
+serving tier must: stay query-ready at all times. The segmented server
+warms once at boot (excluded, like any steady-state measurement) and its
+caches stay valid because snapshots are immutable; the baseline's every
+mutation invalidates its context, so the primary baseline re-warms after
+every rebuild (``rebuild_s``). A lazier variant that defers compilation
+to the first query after each rebuild — trading p99 for throughput — is
+measured alongside (``rebuild_lazy_s``) so the comparison is transparent
+about how much of the gap is compile churn vs index churn. Either way,
+the asymmetry is not unfairness: keeping caches valid under mutation is
+the contribution being measured.
+
+Both sides execute the SAME pre-generated schedule: per round, one
+insert batch, one delete batch, one update batch (three mutation calls),
+then ``q_per`` query batches. Exactness of every stored segmented result
+is verified AFTER timing against an oracle replay of the schedule
+(``exact_verified`` per row — the CI smoke fails on any ``False``).
+The segmented side runs with BACKGROUND compaction (the subsystem's
+deployment mode); the timed region ends with ``flush()`` so any build
+still in flight is fully charged.
+
+Reported per row: mutation+query throughput for both sides
+(``ops_per_s_*``), the speedup (acceptance floor: >= 10x at M >= 32k),
+per-batch latency percentiles from the server's bounded ring
+(p50/p95/p99), and the delta/compaction counters (max delta occupancy,
+compactions, tombstones, final snapshot version).
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line, save_rows
+
+QUICK_SWEEP = (8192,)
+FULL_SWEEP = (32768, 131072)
+
+R, K, B = 32, 10, 8
+
+
+def _catalogue(rng, m: int) -> np.ndarray:
+    T = rng.standard_normal((m, R)).astype(np.float32)
+    T *= (1.0 / np.sqrt(1.0 + np.arange(m, dtype=np.float32)))[:, None]
+    return T
+
+
+def make_schedule(rng, m0: int, rounds: int, ins: int, dels: int,
+                  upds: int, q_per: int):
+    """Pre-generate the op stream (both sides replay it verbatim).
+
+    Mutation targets are chosen against a simulated live set so the
+    timed loops never have to ask the catalogue what is alive.
+    """
+    live = list(range(m0))
+    next_gid = m0
+    ops = []
+    for _ in range(rounds):
+        rows = rng.standard_normal((ins, R)).astype(np.float32)
+        ops.append(("ins", rows))
+        live.extend(range(next_gid, next_gid + ins))
+        next_gid += ins
+        victims = [live.pop(int(rng.integers(len(live))))
+                   for _ in range(dels)]
+        ops.append(("del", victims))
+        upd_gids = [live[int(rng.integers(len(live)))] for _ in range(upds)]
+        ops.append(("upd", upd_gids,
+                    rng.standard_normal((upds, R)).astype(np.float32)))
+        for _ in range(q_per):
+            ops.append(("query",
+                        rng.standard_normal((B, R)).astype(np.float32)))
+    return ops
+
+
+class _OracleCatalogue:
+    """gid -> row dict; exact top-K by dense float64 scoring."""
+
+    def __init__(self, T0):
+        self.items = {i: T0[i] for i in range(T0.shape[0])}
+        self.next_gid = T0.shape[0]
+
+    def apply(self, op):
+        if op[0] == "ins":
+            for row in op[1]:
+                self.items[self.next_gid] = row
+                self.next_gid += 1
+        elif op[0] == "del":
+            for g in op[1]:
+                del self.items[g]
+        elif op[0] == "upd":
+            for g, row in zip(op[1], op[2]):
+                self.items[g] = row
+
+    def topk(self, U, k):
+        gids = np.fromiter(self.items.keys(), np.int64, len(self.items))
+        rows = np.stack([self.items[g] for g in gids])
+        s = U.astype(np.float64) @ rows.astype(np.float64).T
+        order = np.argsort(-s, kind="stable", axis=1)[:, :k]
+        return s[np.arange(U.shape[0])[:, None], order], gids[order]
+
+
+def run_segmented(T0, ops, method="norm", delta_capacity=64,
+                  warm=True):
+    import jax.numpy as jnp
+
+    from repro.core import SepLRModel
+    from repro.serving.server import TopKServer
+
+    srv = TopKServer(SepLRModel(jnp.asarray(T0)), max_batch=B,
+                     block_size=256, delta_capacity=delta_capacity,
+                     compact_async=True)
+    if warm:
+        srv.warmup(K, batch_sizes=(B,), engines=[method])
+    results = []
+    t0 = time.perf_counter()
+    for op in ops:
+        if op[0] == "ins":
+            srv.add_targets(op[1])
+        elif op[0] == "del":
+            srv.delete_targets(op[1])
+        elif op[0] == "upd":
+            srv.update_targets(op[1], op[2])
+        else:
+            res = srv.query(op[1], K, method)
+            results.append((np.asarray(res.values),
+                            np.asarray(res.indices)))
+    srv.catalogue.flush()                    # charge any in-flight build
+    elapsed = time.perf_counter() - t0
+    return srv, results, elapsed
+
+
+def run_rebuild_baseline(T0, ops, method="norm", lazy=False):
+    """Rebuild the serving state after EVERY mutation call: the offline
+    sorted-list index + a fresh :class:`EngineContext` over the live set.
+    Queries go through the same registry engine as the segmented side.
+
+    ``lazy=False`` (the readiness-symmetric primary): each rebuild also
+    re-warms the engine, keeping the tier query-ready at all times — the
+    policy the segmented server follows. ``lazy=True`` defers
+    compilation to the first query after each rebuild (fewer compiles
+    when mutations arrive in bursts, at the cost of post-mutation
+    latency spikes)."""
+    from repro.core import EngineContext, get_engine
+
+    eng = get_engine(method)
+    oracle = _OracleCatalogue(T0)
+    # boot (untimed, like the segmented server's warmup): a ready context
+    # over the initial catalogue — the timed loop measures keeping it
+    # ready under mutations, not standing it up
+    ctx = EngineContext(T0, block_size=256)
+    ctx.index
+    if not lazy:
+        ctx.warmup(K, batch_sizes=(B,), engines=[method])
+    n_rebuilds = 0
+    t0 = time.perf_counter()
+    for op in ops:
+        if op[0] == "query":
+            res = eng.run(ctx, op[1], K)
+            np.asarray(res.values)
+        else:
+            oracle.apply(op)
+            gids = list(oracle.items.keys())
+            rows = np.stack([oracle.items[g] for g in gids])
+            ctx = EngineContext(rows, block_size=256)
+            ctx.index                         # the O(R M log M) offline step
+            if not lazy:
+                ctx.warmup(K, batch_sizes=(B,), engines=[method])
+            n_rebuilds += 1
+    return time.perf_counter() - t0, n_rebuilds
+
+
+def verify(T0, ops, results, atol=1e-3):
+    """Replay the schedule on the oracle; check every stored query result:
+    value vectors match, every returned gid is live and scores its value."""
+    oracle = _OracleCatalogue(T0)
+    it = iter(results)
+    for op in ops:
+        if op[0] != "query":
+            oracle.apply(op)
+            continue
+        vals, gids = next(it)
+        ov, _ = oracle.topk(op[1], K)
+        if not np.allclose(vals, ov, atol=atol):
+            return False
+        for b in range(vals.shape[0]):
+            for j in range(K):
+                g = int(gids[b, j])
+                if g not in oracle.items:
+                    return False
+                if abs(float(op[1][b] @ oracle.items[g]) - vals[b, j]) > atol:
+                    return False
+    return True
+
+
+def run(quick: bool = True, rounds: int = None, save_as: str = "streaming",
+        method: str = "norm"):
+    rng = np.random.default_rng(13)
+    rounds = rounds if rounds is not None else (6 if quick else 24)
+    # delta sized so the stream overflows it at least once (compaction is
+    # exercised) while the LSM amortization is visible: one fold per
+    # hundreds of mutations vs the baseline's rebuild per mutation call
+    delta_capacity = 64 if quick else 512
+    ins, dels, upds, q_per = 16, 8, 8, 4     # mutation-heavy by design
+    rows_out = []
+    for M in (QUICK_SWEEP if quick else FULL_SWEEP):
+        T0 = _catalogue(rng, M)
+        ops = make_schedule(rng, M, rounds, ins, dels, upds, q_per)
+        n_mut_calls = 3 * rounds
+        n_queries = q_per * rounds * B
+        n_ops = n_mut_calls + q_per * rounds
+        srv, results, seg_s = run_segmented(T0, ops, method=method,
+                                            delta_capacity=delta_capacity)
+        exact = verify(T0, ops, results)
+        reb_s, n_rebuilds = run_rebuild_baseline(T0, ops, method=method)
+        reb_lazy_s, _ = run_rebuild_baseline(T0, ops, method=method,
+                                             lazy=True)
+        st = srv.stats[method]
+        ms = srv.mutation_stats
+        rows_out.append({
+            "M": M, "R": R, "K": K, "batch": B, "method": method,
+            "rounds": rounds, "mutation_calls": n_mut_calls,
+            "mutated_items": rounds * (ins + dels + upds),
+            "queries": n_queries,
+            "exact_verified": bool(exact),
+            "segmented_s": seg_s,
+            "rebuild_s": reb_s,
+            "rebuild_lazy_s": reb_lazy_s,
+            "n_rebuilds": n_rebuilds,
+            "ops_per_s_segmented": n_ops / seg_s,
+            "ops_per_s_rebuild": n_ops / reb_s,
+            "speedup_vs_rebuild": reb_s / seg_s,
+            "speedup_vs_rebuild_lazy": reb_lazy_s / seg_s,
+            "qps_segmented": n_queries / seg_s,
+            "us_per_query_mean": st.us_per_query,
+            "p50_us": st.p50_us, "p95_us": st.p95_us, "p99_us": st.p99_us,
+            "delta_scored_per_query": st.delta_scored / max(st.n_queries, 1),
+            "delta_capacity": srv.catalogue.delta_capacity,
+            "max_delta_occupancy": ms["max_delta_occupancy"],
+            "n_compactions": ms["n_compactions"],
+            "n_tombstones_final": ms["n_tombstones"],
+            "snapshot_version": ms["snapshot_version"],
+            "num_live_final": ms["num_live"],
+        })
+    save_rows(save_as, rows_out)
+    return rows_out
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    bad = [r["M"] for r in rows if not r["exact_verified"]]
+    r0 = rows[0]
+    derived = (f"speedup={r0['speedup_vs_rebuild']:.1f}x,"
+               f"compactions={r0['n_compactions']},"
+               f"p99={r0['p99_us']:.0f}us,exact_failures={bad or 'none'}")
+    print(csv_line("streaming", 1e6 / r0["qps_segmented"], derived))
+    assert not bad, f"segmented results diverged from rebuild oracle: {bad}"
+    slow = [r["M"] for r in rows
+            if r["M"] >= 32768 and r["speedup_vs_rebuild"] < 10.0]
+    assert not slow, f"segmented < 10x rebuild-per-mutation at M={slow}"
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--full" not in sys.argv)

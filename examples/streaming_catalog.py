@@ -1,0 +1,67 @@
+"""Streaming catalogue demo: exact top-K while the catalogue mutates.
+
+Boots a ``TopKServer``, streams item inserts / updates / deletes while
+querying, and prints exactness + delta/compaction stats after every
+round — the paper's exactness guarantee surviving a mutating catalogue
+(DESIGN.md §9: base snapshot + delta segment + tombstones, folded by a
+threshold-triggered compaction).
+
+    PYTHONPATH=src python examples/streaming_catalog.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import SepLRModel
+from repro.serving.server import TopKServer
+
+rng = np.random.default_rng(0)
+M, R, K = 20_000, 24, 10
+
+# 1) Boot a server over the initial catalogue and warm it: engines AND the
+#    streaming layer's delta buckets compile ahead of traffic, so the first
+#    query after any insert dispatches cached executables (0 retraces).
+model = SepLRModel(jnp.asarray(
+    rng.standard_normal((M, R)).astype(np.float32)
+    * (1.0 / np.sqrt(1.0 + np.arange(M, dtype=np.float32)))[:, None]))
+srv = TopKServer(model, max_batch=8, delta_capacity=64)
+srv.warmup(K, batch_sizes=(8,), engines=["norm"])
+print(f"catalogue: M={M} items, R={R}; serving method='norm', K={K}")
+
+def exact_against_rebuild(U, res):
+    """Oracle: dense top-K over a fresh dump of every live item."""
+    rows, gids = srv.catalogue.as_dense()
+    scores = U @ rows.T
+    best = np.sort(scores, axis=1)[:, -K:][:, ::-1]
+    return bool(np.allclose(np.sort(res.values, axis=1)[:, ::-1],
+                            best, atol=1e-4))
+
+live = list(range(M))
+for rnd in range(6):
+    # 2) Mutate: new items arrive, stale ones leave, a few get re-embedded.
+    new_gids = srv.add_targets(
+        rng.standard_normal((24, R)).astype(np.float32))
+    live.extend(int(g) for g in new_gids)
+    victims = [live.pop(int(rng.integers(len(live)))) for _ in range(8)]
+    srv.delete_targets(victims)
+    upd = [live[int(rng.integers(len(live)))] for _ in range(8)]
+    srv.update_targets(upd, rng.standard_normal((8, R)).astype(np.float32))
+
+    # 3) Query mid-stream: results carry GLOBAL ids and stay provably
+    #    exact at any delta occupancy / tombstone count.
+    U = rng.standard_normal((8, R)).astype(np.float32)
+    res = srv.query(U, K, "norm")
+    ms = srv.mutation_stats
+    print(f"round {rnd}: exact={exact_against_rebuild(U, res)} "
+          f"live={ms['num_live']} delta={ms['delta_occupancy']}"
+          f"/{srv.catalogue.delta_capacity} "
+          f"tombstones={ms['n_tombstones']} "
+          f"compactions={ms['n_compactions']} "
+          f"(snapshot v{ms['snapshot_version']})")
+
+st = srv.stats["norm"]
+print(f"served {st.n_queries} queries: {st.scores_per_query:.0f} scores/q "
+      f"(of {ms['num_live']} live), p50={st.p50_us:.0f}us "
+      f"p95={st.p95_us:.0f}us p99={st.p99_us:.0f}us")
+assert srv.mutation_stats["n_compactions"] >= 1, "stream never compacted"
+print("every mid-stream query matched a fresh full rebuild exactly.")

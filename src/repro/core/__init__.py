@@ -15,6 +15,8 @@ Engine layer (DESIGN.md):
   ta_round_strategy / blocked_lists_strategy / norm_block_strategy
   Engine, EngineContext, register_engine, get_engine, list_engines,
   engine_names, select_engine     — the name-keyed engine registry
+  SegmentedCatalogue              — streaming (base + delta + tombstone)
+                                    exact top-K over a mutating catalogue
 """
 
 from repro.core.blocked import (
@@ -52,6 +54,15 @@ from repro.core.layout import (
     layout_names,
 )
 from repro.core.naive import TopKResult, naive_topk
+from repro.core.segments import (
+    DEFAULT_DELTA_CAPACITY,
+    DeltaSegment,
+    QueryInfo,
+    SegmentStats,
+    SegmentedCatalogue,
+    Snapshot,
+    delta_bucket,
+)
 from repro.core.partial import PartialTAStats, partial_threshold_topk_np
 from repro.core.seplr import (
     SepLRModel,
@@ -106,4 +117,7 @@ __all__ = [
     "RowMajorLayout", "NormMajorLayout", "ListMajorLayout",
     "ShardedNormLayout", "build_layout", "layout_names",
     "DEFAULT_PREFIX_DEPTH",
+    # streaming catalogue subsystem
+    "SegmentedCatalogue", "Snapshot", "DeltaSegment", "QueryInfo",
+    "SegmentStats", "delta_bucket", "DEFAULT_DELTA_CAPACITY",
 ]

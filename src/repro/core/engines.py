@@ -94,6 +94,23 @@ def batch_bucket(n: int) -> int:
     return 1 << max(0, int(n) - 1).bit_length()
 
 
+def pad_to_bucket(U: "Array") -> "Array":
+    """Pad a ``[B, R]`` batch to its power-of-two bucket.
+
+    Padding repeats the LAST query row — never zeros: an all-zero query
+    deactivates every list and would drag a vmapped lockstep scan to its
+    worst case. Shared by the engine compile cache and the segmented
+    query path (:mod:`repro.core.segments`), so the two can never
+    diverge on padding semantics.
+    """
+    b = U.shape[0]
+    bucket = batch_bucket(b)
+    if bucket == b:
+        return U
+    pad = jnp.broadcast_to(U[b - 1:b], (bucket - b, U.shape[1]))
+    return jnp.concatenate([U, pad], axis=0)
+
+
 class EngineContext:
     """Catalogue + lazily built per-engine state, shared across queries.
 
@@ -111,12 +128,20 @@ class EngineContext:
         faster there); ``0`` disables the layout path entirely; any
         other value is honoured as given (clamped to ``M``). See
         :attr:`resolved_prefix_depth`.
+      version: snapshot version of the catalogue this context was built
+        from (DESIGN.md §9). The streaming layer
+        (:mod:`repro.core.segments`) builds one context per immutable
+        base snapshot under a monotonically increasing version; the
+        version participates in the compile-cache key so executables
+        compiled against one snapshot's pytrees can never be dispatched
+        against another's, even if a context object were ever shared
+        across snapshots.
     """
 
     def __init__(self, targets, index: Optional[TopKIndex] = None,
                  block_size: int = 256, max_blocks: int = -1,
                  interpret=None, ta_chunk: int = 32,
-                 prefix_depth: Optional[int] = None):
+                 prefix_depth: Optional[int] = None, version: int = 0):
         self.targets = jnp.asarray(targets, dtype=jnp.float32)
         self.block_size = block_size
         self.max_blocks = max_blocks
@@ -125,14 +150,16 @@ class EngineContext:
         # list_major prefix depth; None -> DEFAULT_PREFIX_DEPTH, 0 disables
         # the layout path entirely (list engines fall back to gathers)
         self.prefix_depth = prefix_depth
+        self.version = int(version)
         self._index = index
         self._catalog = None
         self._norm_decay = None
         self._layouts: Dict[str, object] = {}
-        # persistent compiled-executable cache: (engine, k, batch-bucket)
-        # -> jitted batched callable. trace_counts counts actual traces per
-        # engine name (bumped at trace time, so a cache hit adds nothing).
-        self._compiled: Dict[Tuple[str, int, int], Callable] = {}
+        # persistent compiled-executable cache: (engine, k, batch-bucket,
+        # snapshot version) -> jitted batched callable. trace_counts counts
+        # actual traces per engine name (bumped at trace time, so a cache
+        # hit adds nothing).
+        self._compiled: Dict[Tuple[str, int, int, int], Callable] = {}
         self.trace_counts: Dict[str, int] = {}
 
     @property
@@ -217,7 +244,8 @@ class EngineContext:
     # -- compilation cache ---------------------------------------------------
 
     def compiled(self, engine: "Engine", k: int, batch: int) -> Callable:
-        """The persistent jitted executable for (engine, k, batch-bucket).
+        """The persistent jitted executable for
+        (engine, k, batch-bucket, snapshot version).
 
         Built once per key: the engine's ``make_batched`` factory is called
         EAGERLY (so lazy context state — index, Pallas catalogue — is
@@ -225,7 +253,7 @@ class EngineContext:
         ``jax.jit`` that survives across queries. The wrapper bumps
         ``trace_counts[engine]`` at trace time only.
         """
-        key = (engine.name, int(k), int(batch))
+        key = (engine.name, int(k), int(batch), self.version)
         fn = self._compiled.get(key)
         if fn is None:
             if engine.make_batched is None:
@@ -258,8 +286,7 @@ class EngineContext:
         bucket = batch_bucket(b)
         fn = self.compiled(engine, k, bucket)
         if bucket != b:
-            pad = jnp.broadcast_to(U[b - 1:b], (bucket - b, U.shape[1]))
-            U = jnp.concatenate([U, pad], axis=0)
+            U = pad_to_bucket(U)
         res = fn(U)
         if bucket != b:
             res = jax.tree_util.tree_map(lambda a: a[:b], res)

@@ -19,10 +19,21 @@ the engine that actually ran.
 ``TwoStageRanker`` is the production recsys pattern from DESIGN.md §3:
 exact SEP-LR top-N retrieval (where the paper's algorithms apply) followed
 by full-model re-ranking of the N retrieved candidates (where they don't).
+
+**Streaming mutations** (DESIGN.md §9): the server's catalogue is a
+:class:`repro.core.segments.SegmentedCatalogue` — an immutable base
+snapshot (the EngineContext every engine runs against) plus a delta
+buffer and tombstones. :meth:`TopKServer.add_targets` /
+:meth:`delete_targets` / :meth:`update_targets` mutate it without an
+index rebuild and without giving up exactness; a threshold-triggered
+compaction folds the mutations into a fresh snapshot under a new
+version. A never-mutated server serves the identical code path (and the
+identical compiled executables) as before the streaming layer existed.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable, Dict, List
@@ -39,16 +50,36 @@ from repro.core.engines import (
     get_engine,
     select_engine,
 )
+from repro.core.segments import SegmentedCatalogue
 
 Array = jnp.ndarray
+
+#: Ring-buffer length for per-batch latency percentiles: enough batches
+#: for stable p99 at serving rates, bounded so a long-lived server never
+#: grows its stats footprint.
+LATENCY_RING = 512
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Per-engine serving statistics.
+
+    Latency is tracked two ways: the lifetime mean (``us_per_query``,
+    exact over every query ever served) and percentiles over a BOUNDED
+    ring of recent per-batch latencies (``p50_us``/``p95_us``/``p99_us``
+    — each entry is one batch's per-query microseconds, so tail entries
+    reflect stragglers like a post-mutation retrace or a compaction
+    swap). ``delta_scored`` counts scores spent on the streaming delta
+    segments, separating mutation-induced work from base-scan work.
+    """
+
     n_queries: int = 0
     n_scored: int = 0
     total_time_s: float = 0.0
     depth_sum: int = 0
+    delta_scored: int = 0
+    lat_us_ring: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
 
     @property
     def scores_per_query(self) -> float:
@@ -58,19 +89,52 @@ class ServeStats:
     def us_per_query(self) -> float:
         return 1e6 * self.total_time_s / max(self.n_queries, 1)
 
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of recent per-batch latencies, in us."""
+        if not self.lat_us_ring:
+            return 0.0
+        return float(np.percentile(np.asarray(self.lat_us_ring), q))
+
+    @property
+    def p50_us(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p95_us(self) -> float:
+        return self.latency_percentile(95.0)
+
+    @property
+    def p99_us(self) -> float:
+        return self.latency_percentile(99.0)
+
 
 class TopKServer:
     def __init__(self, model: SepLRModel, max_batch: int = 64,
-                 block_size: int = 256):
+                 block_size: int = 256, delta_capacity: int = 256,
+                 compact_async: bool = False):
         self.model = model
-        self.ctx = EngineContext(model.targets, block_size=block_size)
+        self.catalogue = SegmentedCatalogue(
+            model.targets, delta_capacity=delta_capacity,
+            compact_async=compact_async, block_size=block_size)
         self.max_batch = max_batch
         self.block_size = block_size
         self.stats: Dict[str, ServeStats] = {}
 
     @property
+    def ctx(self) -> EngineContext:
+        """The CURRENT base snapshot's engine context (compaction swaps
+        in a fresh one under the next version — hold :attr:`catalogue`
+        if you need a stable reference across mutations)."""
+        return self.catalogue.snapshot.ctx
+
+    @property
     def index(self) -> TopKIndex:
         return self.ctx.index
+
+    @property
+    def trace_counts(self) -> Dict[str, int]:
+        """Engine traces (current snapshot) + segmented-tail traces."""
+        return {**self.ctx.trace_counts, **self.catalogue.trace_counts}
 
     @staticmethod
     def available_engines() -> List[str]:
@@ -81,17 +145,59 @@ class TopKServer:
         """Populate the per-engine compiled-executable cache ahead of
         traffic (DESIGN.md §6). After warmup, same-shape queries hit the
         cache with zero new traces (``self.ctx.trace_counts`` proves it).
+
+        Also warms the streaming layer: the segmented tail is compiled
+        for EVERY delta-capacity bucket (DESIGN.md §9), so the first
+        query after any insert dispatches cached executables — 0 new
+        traces — and records the warm spec so compaction pre-warms each
+        replacement snapshot before swapping it in.
         """
         sizes = tuple(batch_sizes) if batch_sizes else (1, self.max_batch)
         self.ctx.warmup(k, batch_sizes=sizes, engines=engines)
+        self.catalogue.warm(k, batch_sizes=sizes, engines=engines)
+        self.catalogue.set_warm_spec(k, sizes, engines)
         return self
 
-    def _record(self, method: str, res, dt: float, n: int):
+    # -- streaming mutations (DESIGN.md §9) ---------------------------------
+
+    def add_targets(self, rows) -> np.ndarray:
+        """Stream new items into the catalogue; returns their global ids."""
+        return self.catalogue.add_targets(rows)
+
+    def delete_targets(self, gids) -> None:
+        """Tombstone items; queries exclude them immediately and exactly."""
+        self.catalogue.delete_targets(gids)
+
+    def update_targets(self, gids, rows) -> None:
+        """Replace item factors in place (same global ids)."""
+        self.catalogue.update_targets(gids, rows)
+
+    @property
+    def mutation_stats(self) -> Dict[str, float]:
+        """Delta/compaction counters for the bench harness and dashboards."""
+        cat = self.catalogue
+        return {
+            "n_inserts": cat.stats.n_inserts,
+            "n_deletes": cat.stats.n_deletes,
+            "n_updates": cat.stats.n_updates,
+            "n_compactions": cat.stats.n_compactions,
+            "n_failed_compactions": cat.stats.n_failed_compactions,
+            "max_delta_occupancy": cat.stats.max_delta_occupancy,
+            "delta_occupancy": cat.delta_occupancy,
+            "n_tombstones": cat.n_tombstones,
+            "snapshot_version": cat.version,
+            "num_live": cat.num_live,
+        }
+
+    def _record(self, method: str, res, dt: float, n: int,
+                delta_scored: int = 0):
         s = self.stats.setdefault(method, ServeStats())
         s.n_queries += n
         s.n_scored += int(np.sum(np.asarray(res.n_scored)))
         s.depth_sum += int(np.sum(np.asarray(res.depth)))
         s.total_time_s += dt
+        s.delta_scored += int(delta_scored) * n
+        s.lat_us_ring.append(1e6 * dt / max(n, 1))
 
     def query(self, U: Array, k: int, method: str = "bta"):
         """U: [B, R] (or [R]). Returns TopKResult batched like U.
@@ -100,7 +206,10 @@ class TopKServer:
         :meth:`available_engines`; unknown names raise ``ValueError``.
         ``auto`` dispatch reads its sparsity statistic from the incoming
         HOST array — engine selection never enqueues work on the device
-        query stream.
+        query stream. Once the catalogue has streamed mutations, results
+        carry GLOBAL item ids and reflect every mutation exactly (the
+        segmented query path, DESIGN.md §9); a never-mutated server runs
+        the raw engine path unchanged.
         """
         engine: Engine = get_engine(method)
         # Keep the batch wherever the caller had it: host inputs are
@@ -118,10 +227,11 @@ class TopKServer:
             eng = (select_engine(self.ctx, chunk)
                    if engine.name == "auto" else engine)
             t0 = time.perf_counter()
-            res = jax.tree_util.tree_map(
-                np.asarray, eng.run(self.ctx, chunk, k))
+            res, info = self.catalogue.query(eng, chunk, k)
+            res = jax.tree_util.tree_map(np.asarray, res)
             dt = time.perf_counter() - t0
-            self._record(eng.name, res, dt, chunk.shape[0])
+            self._record(eng.name, res, dt, chunk.shape[0],
+                         info.delta_scored)
             outs.append(res)
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *outs)

@@ -62,6 +62,33 @@ def test_engines_sweep_smoke():
         assert json.load(f) == rows
 
 
+@pytest.mark.slow
+def test_streaming_sweep_smoke():
+    """Tier-2 benchmark smoke (CI `bench` job): the streaming sweep runs
+    at small M with a high mutation rate, every segmented query result is
+    verified (to float tolerance) against a float64 oracle replay of the
+    schedule (the job FAILS on any `exact_verified: false`), and the JSON
+    artifact carries the delta/compaction and latency-percentile
+    columns."""
+    # scratch name: results/bench/streaming.json is the committed artifact
+    from benchmarks import streaming
+    rows = streaming.run(quick=True, rounds=4, save_as="streaming_smoke")
+    assert rows, "sweep produced no rows"
+    bad = [r["M"] for r in rows if not r["exact_verified"]]
+    assert not bad, f"segmented results diverged from the oracle: {bad}"
+    required = {"M", "exact_verified", "segmented_s", "rebuild_s",
+                "rebuild_lazy_s", "speedup_vs_rebuild", "qps_segmented",
+                "p50_us", "p95_us", "p99_us", "n_compactions",
+                "max_delta_occupancy", "n_tombstones_final",
+                "snapshot_version", "delta_capacity"}
+    assert all(required <= set(r) for r in rows)
+    for r in rows:
+        assert r["n_compactions"] >= 1          # churn actually compacted
+        assert 0 < r["p50_us"] <= r["p95_us"] <= r["p99_us"]
+    with open(os.path.join("results", "bench", "streaming_smoke.json")) as f:
+        assert json.load(f) == rows
+
+
 def test_bta_engines_close_to_ta():
     from benchmarks import bta_tpu
     rows = bta_tpu.run(quick=True)

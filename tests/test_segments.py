@@ -1,0 +1,490 @@
+"""Streaming-catalogue exactness: the segmented (base + delta + tombstone)
+top-K equals a freshly rebuilt index's top-K at EVERY point of randomized
+insert/update/delete/query interleavings (DESIGN.md §9), across delta
+occupancies 0 -> overflow-forced compaction, including tombstoned-rows-in-
+the-base-top-K and all-negative queries."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineContext, SegmentedCatalogue, get_engine
+
+R = 12
+K = 5
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _base(rng, m=400):
+    return rng.standard_normal((m, R)).astype(np.float32)
+
+
+def _oracle(cat, U, k):
+    """Fresh-rebuild oracle: dense scores over the live set, NumPy argsort."""
+    rows, gids = cat.as_dense()
+    U = np.atleast_2d(np.asarray(U, np.float32))
+    s = U.astype(np.float64) @ rows.astype(np.float64).T
+    order = np.argsort(-s, kind="stable", axis=1)[:, :k]
+    return s[np.arange(U.shape[0])[:, None], order], gids[order]
+
+
+def _rebuilt_engine_topk(cat, engine_name, U, k):
+    """A FRESH index + engine over the live set — the rebuild the
+    streaming layer replaces. Returns (values, gids)."""
+    rows, gids = cat.as_dense()
+    ctx = EngineContext(rows, block_size=32)
+    res = get_engine(engine_name).run(
+        ctx, jnp.atleast_2d(jnp.asarray(U)), k)
+    idx = np.asarray(res.indices)
+    return np.asarray(res.values), np.where(idx >= 0, gids[idx], -1)
+
+
+def assert_exact(cat, U, k=K, engine="norm"):
+    """Segmented top-K == fresh-rebuild top-K: identical value vectors, and
+    identical id sets wherever the k-boundary is unambiguous."""
+    res, info = cat.query(get_engine(engine), U, k)
+    vals = np.asarray(res.values)
+    gids = np.asarray(res.indices)
+    ov, og = _oracle(cat, U, k)
+    n_live = cat.num_live
+    kk = min(k, n_live)
+    np.testing.assert_allclose(vals[:, :kk], ov[:, :kk], atol=1e-4,
+                               err_msg="segmented values != rebuilt values")
+    if kk < k:          # fewer live items than k: the rest must be padding
+        assert np.all(vals[:, kk:] == -np.inf)
+        assert np.all(gids[:, kk:] == -1)
+    # every returned id is live and scores what the result claims
+    rows, all_gids = cat.as_dense()
+    by_gid = {int(g): rows[i] for i, g in enumerate(all_gids)}
+    for b in range(vals.shape[0]):
+        for j in range(kk):
+            g = int(gids[b, j])
+            assert g in by_gid, f"returned gid {g} is not live"
+            np.testing.assert_allclose(
+                float(np.asarray(U, np.float32).reshape(-1, R)[b]
+                      @ by_gid[g]), vals[b, j], atol=1e-4)
+        # id SETS agree when the k-th / (k+1)-th gap is unambiguous
+        if n_live > kk and kk > 0 and ov[b, kk - 1] - _oracle(
+                cat, np.atleast_2d(U)[b], kk + 1)[0][0, kk] > 1e-4:
+            assert set(gids[b, :kk].tolist()) == set(og[b, :kk].tolist())
+    return res, info
+
+
+def test_pristine_matches_static_path():
+    rng = _rng(0)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = rng.standard_normal((4, R)).astype(np.float32)
+    assert cat.pristine
+    res, info = cat.query(get_engine("bta"), U, K)
+    assert info.n_segments == 0 and info.delta_scored == 0
+    ov, og = _oracle(cat, U, K)
+    np.testing.assert_allclose(np.asarray(res.values), ov, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(res.indices), og)
+
+
+def test_tombstoned_row_in_base_topk_is_dropped():
+    """Delete the base item that IS the top-1: the over-fetch must recover
+    the true top-K from the survivors."""
+    rng = _rng(1)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = rng.standard_normal((3, R)).astype(np.float32)
+    _, top_gids = _oracle(cat, U, 1)
+    victims = sorted({int(g) for g in top_gids.ravel()})
+    cat.delete_targets(victims)
+    res, info = assert_exact(cat, U)
+    # the tombstone-adaptive fetch over-fetches k + reserve in ONE run; a
+    # handful of dead rows fit that margin, so no ladder climb is needed
+    assert not info.retried
+    assert info.overfetch_k == min(cat.snapshot.num_rows,
+                                   K + cat.overfetch_reserve)
+    returned = set(np.asarray(res.indices).ravel().tolist())
+    assert not (returned & set(victims))
+
+
+def test_update_replaces_in_place_and_twice():
+    rng = _rng(2)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    gid = 7
+    big = (10.0 * U[0] / np.linalg.norm(U[0])).astype(np.float32)
+    cat.update_targets([gid], [big])
+    res, _ = assert_exact(cat, U)
+    assert int(np.asarray(res.indices)[0, 0]) == gid   # updated row wins
+    # update the SAME gid again: only the latest copy may be visible
+    cat.update_targets([gid], [np.zeros(R, np.float32)])
+    res, _ = assert_exact(cat, U)
+    assert int(np.asarray(res.indices)[0, 0]) != gid
+    assert cat.num_live == 400
+
+
+def test_all_negative_queries_stay_exact():
+    rng = _rng(3)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = -np.abs(rng.standard_normal((3, R))).astype(np.float32)
+    cat.add_targets(-np.abs(rng.standard_normal((5, R))).astype(np.float32))
+    cat.delete_targets([0, 1])
+    assert_exact(cat, U)
+
+
+def test_delta_overflow_forces_compaction_and_stays_exact():
+    rng = _rng(4)
+    cat = SegmentedCatalogue(_base(rng, 200), delta_capacity=8,
+                             block_size=32)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    for i in range(30):                      # 30 inserts through capacity 8
+        cat.add_targets(rng.standard_normal((1, R)).astype(np.float32) * 2)
+        if i % 7 == 0:
+            assert_exact(cat, U)
+    assert cat.stats.n_compactions >= 3
+    assert cat.version == cat.stats.n_compactions
+    assert cat.num_live == 230
+    assert_exact(cat, U)
+    # compaction re-packed: tombstones gone, fresh context per version
+    assert cat.n_tombstones == 0
+    assert cat.snapshot.ctx.version == cat.version
+
+
+def test_n_scored_extends_to_delta_and_depth_is_base():
+    rng = _rng(5)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    eng = get_engine("norm")
+    base_res, _ = cat.query(eng, U, K)
+    cat.add_targets(rng.standard_normal((6, R)).astype(np.float32))
+    cat.delete_targets([3])                  # one delta-irrelevant tombstone
+    res, info = cat.query(eng, U, K)
+    assert info.delta_scored == 6
+    # n_scored = base engine scores (at the over-fetched k) + live delta
+    assert np.all(np.asarray(res.n_scored)
+                  >= np.asarray(base_res.n_scored) + 6)
+    assert np.all(np.asarray(res.depth) >= 1)
+
+
+def test_tombstone_adaptive_overfetch():
+    """No tombstones -> the base runs at plain k; any tombstones -> the
+    single pre-warmed k + reserve over-fetch, absorbing hits without a
+    rerun — even when the deleted item WAS a query's top-1."""
+    rng = _rng(6)
+    cat = SegmentedCatalogue(_base(rng), block_size=32)
+    U = rng.standard_normal((1, R)).astype(np.float32)
+    eng = get_engine("norm")
+    _, info = cat.query(eng, U, K)
+    assert info.overfetch_k == K and not info.retried
+    sv, sg = _oracle(cat, U, 400)            # full ranking for this query
+    kb_esc = min(cat.snapshot.num_rows, K + cat.overfetch_reserve)
+    # tombstone 4 items from the BOTTOM of the ranking (miss the top-k)
+    cat.delete_targets([int(g) for g in sg[0, -4:]])
+    res, info = cat.query(eng, U, K)
+    assert not info.retried and info.overfetch_k == kb_esc
+    assert_exact(cat, U)
+    # tombstone the query's top-1: still one run — the reserve margin
+    # absorbs the hit, no ladder climb
+    cat.delete_targets([int(sg[0, 0])])
+    res, info = cat.query(eng, U, K)
+    assert not info.retried and info.overfetch_k == kb_esc
+    assert int(sg[0, 0]) not in set(np.asarray(res.indices)[0].tolist())
+    assert_exact(cat, U)
+
+
+def test_randomized_interleaving_always_exact():
+    """The acceptance property: random insert/update/delete streams, exact
+    vs a fresh rebuild at every query point, across delta occupancies
+    0 -> overflow (capacity 8 forces multiple compactions)."""
+    rng = _rng(7)
+    cat = SegmentedCatalogue(_base(rng, 150), delta_capacity=8,
+                             block_size=32)
+    live = list(range(150))
+    for step in range(60):
+        op = rng.choice(["ins", "del", "upd", "query"],
+                        p=[0.3, 0.2, 0.2, 0.3])
+        if op == "ins":
+            n = int(rng.integers(1, 4))
+            gids = cat.add_targets(
+                rng.standard_normal((n, R)).astype(np.float32) * 1.5)
+            live.extend(int(g) for g in gids)
+        elif op == "del" and len(live) > K + 2:
+            victim = live.pop(int(rng.integers(len(live))))
+            cat.delete_targets([victim])
+        elif op == "upd" and live:
+            gid = live[int(rng.integers(len(live)))]
+            cat.update_targets(
+                [gid], rng.standard_normal((1, R)).astype(np.float32) * 2)
+        else:
+            U = rng.standard_normal(
+                (int(rng.integers(1, 5)), R)).astype(np.float32)
+            assert_exact(cat, U)
+    assert cat.stats.n_compactions >= 1      # overflow was actually hit
+    assert_exact(cat, rng.standard_normal((3, R)).astype(np.float32))
+    assert cat.num_live == len(live)
+
+
+def test_engines_agree_after_mutations():
+    """Every jax registry engine serves the SAME mutated catalogue state
+    through the segmented wrapper — engines untouched, mutation-aware."""
+    rng = _rng(8)
+    cat = SegmentedCatalogue(_base(rng, 300), block_size=32)
+    cat.add_targets(rng.standard_normal((10, R)).astype(np.float32))
+    cat.delete_targets([5, 6, 7])
+    cat.update_targets([10], rng.standard_normal((1, R)).astype(np.float32))
+    U = rng.standard_normal((4, R)).astype(np.float32)
+    ref, _ = cat.query(get_engine("naive"), U, K)
+    for name in ("ta", "bta", "norm"):
+        res, _ = cat.query(get_engine(name), U, K)
+        np.testing.assert_allclose(np.asarray(res.values),
+                                   np.asarray(ref.values), atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(res.indices),
+                                      np.asarray(ref.indices))
+
+
+def test_segmented_matches_rebuilt_engine_not_just_numpy():
+    """Cross-check against an actual rebuilt INDEX + engine (not only the
+    numpy oracle): same values, same gid sets."""
+    rng = _rng(9)
+    cat = SegmentedCatalogue(_base(rng, 250), delta_capacity=16,
+                             block_size=32)
+    cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+    cat.delete_targets([int(g) for g in range(0, 20, 3)])
+    U = rng.standard_normal((3, R)).astype(np.float32)
+    res, _ = cat.query(get_engine("bta"), U, K)
+    rv, rg = _rebuilt_engine_topk(cat, "bta", U, K)
+    np.testing.assert_allclose(np.asarray(res.values), rv, atol=1e-4)
+    for b in range(3):
+        assert (set(np.asarray(res.indices)[b].tolist())
+                == set(rg[b].tolist()))
+
+
+def test_delete_everything_then_recover():
+    rng = _rng(10)
+    cat = SegmentedCatalogue(_base(rng, 30), delta_capacity=8,
+                             block_size=16)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    cat.delete_targets(list(range(30)))
+    assert cat.num_live == 0
+    res, _ = cat.query(get_engine("norm"), U, K)
+    assert np.all(np.asarray(res.values) == -np.inf)
+    assert np.all(np.asarray(res.indices) == -1)
+    cat.compact()                            # empty compaction: guard row
+    res, _ = cat.query(get_engine("norm"), U, K)
+    assert np.all(np.asarray(res.indices) == -1)
+    gids = cat.add_targets(rng.standard_normal((4, R)).astype(np.float32))
+    res, _ = assert_exact(cat, U, k=3)
+    assert set(np.asarray(res.indices)[0].tolist()) <= set(
+        int(g) for g in gids)
+
+
+def test_background_compaction_with_concurrent_mutations():
+    """compact_async=True: queries and mutations keep landing while the
+    replacement snapshot builds; deletes that race the build are re-applied
+    at swap (pending-dead), so the post-swap state is exact."""
+    rng = _rng(11)
+    cat = SegmentedCatalogue(_base(rng, 300), delta_capacity=8,
+                             block_size=32, compact_async=True)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    cat.add_targets(rng.standard_normal((8, R)).astype(np.float32))  # full
+    cat.add_targets(rng.standard_normal((1, R)).astype(np.float32))  # trigger
+    # race the build: a base delete + an active-delta query
+    cat.delete_targets([0, 1, 2])
+    assert_exact(cat, U)
+    cat.flush()
+    assert cat.stats.n_compactions == 1
+    assert_exact(cat, U)
+    assert cat.num_live == 300 + 9 - 3
+    # the deletes survived the swap no matter when they landed
+    returned = set(np.asarray(
+        cat.query(get_engine("naive"), U, 300)[0].indices).ravel().tolist())
+    assert not (returned & {0, 1, 2})
+
+
+def test_version_monotone_and_snapshot_pytrees_stable():
+    rng = _rng(12)
+    cat = SegmentedCatalogue(_base(rng, 100), delta_capacity=4,
+                             block_size=16)
+    snap0 = cat.snapshot
+    versions = [cat.version]
+    for _ in range(3):
+        cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+        versions.append(cat.version)
+    assert versions == sorted(versions) and versions[-1] >= 1
+    # the old snapshot's arrays are untouched by the swap (in-flight jitted
+    # calls keep valid pytrees)
+    assert snap0.version == 0
+    assert snap0.ctx.version == 0
+    np.testing.assert_array_equal(snap0.gids_np, np.arange(100))
+
+
+def test_escalation_ladder_climbs_past_reserve():
+    """> reserve dead rows inside one query's top slice: the margin check
+    fails at k + reserve and the fetch climbs x4 — still exact."""
+    from repro.core.segments import ESCALATION_STEP
+    rng = _rng(17)
+    T = rng.standard_normal((300, R)).astype(np.float32)
+    u = rng.standard_normal(R).astype(np.float32)
+    un = (u / np.linalg.norm(u)).astype(np.float32)
+    n_top = 40                               # > reserve (32)
+    T[:n_top] = un[None, :] * (
+        10.0 + np.arange(n_top, dtype=np.float32))[:, None]
+    cat = SegmentedCatalogue(T, block_size=32)
+    cat.delete_targets(list(range(n_top)))
+    res, info = cat.query(get_engine("norm"), u[None], K)
+    assert info.retried
+    assert info.overfetch_k == min(
+        300, K + ESCALATION_STEP * cat.overfetch_reserve)
+    assert not (set(np.asarray(res.indices)[0].tolist())
+                & set(range(n_top)))
+    assert_exact(cat, u[None])
+
+
+def test_mutation_batches_are_atomic_on_error():
+    """Validate-then-apply: a bad gid anywhere in a batch leaves the
+    catalogue untouched, so the batch is retryable."""
+    rng = _rng(14)
+    cat = SegmentedCatalogue(_base(rng, 60), block_size=16)
+    with pytest.raises(KeyError):
+        cat.delete_targets([5, 99999])
+    with pytest.raises(KeyError):
+        cat.delete_targets([7, 7])               # duplicate in one batch
+    with pytest.raises(KeyError):
+        cat.update_targets([6, 99999], np.zeros((2, R), np.float32))
+    assert cat.num_live == 60                    # nothing was tombstoned
+    assert cat.stats.n_deletes == 0 and cat.stats.n_updates == 0
+    cat.delete_targets([5, 7])                   # the retry succeeds
+    cat.update_targets([6], np.zeros((1, R), np.float32))
+    assert cat.num_live == 58
+
+
+def test_update_same_gid_twice_in_one_batch_last_wins():
+    rng = _rng(15)
+    cat = SegmentedCatalogue(_base(rng, 80), block_size=16)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    rows = np.stack([np.full(R, 9.0, np.float32),
+                     rng.standard_normal(R).astype(np.float32)])
+    cat.update_targets([3, 3], rows)
+    assert cat.num_live == 80
+    res, _ = assert_exact(cat, U)
+    rows_live, gids_live = cat.as_dense()
+    np.testing.assert_array_equal(
+        rows_live[list(gids_live).index(3)], rows[1])
+
+
+def test_failed_background_build_loses_nothing(monkeypatch):
+    """A build() crash must strand no rows: the sealed segments stay
+    queryable and the next compaction folds the whole chain."""
+    import repro.core.segments as seg_mod
+    rng = _rng(16)
+    cat = SegmentedCatalogue(_base(rng, 120), delta_capacity=8,
+                             block_size=16, compact_async=True)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    real_ctx = seg_mod.EngineContext
+    boom = {"armed": True}
+
+    def flaky_ctx(*args, **kwargs):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated snapshot build failure")
+        return real_ctx(*args, **kwargs)
+
+    monkeypatch.setattr(seg_mod, "EngineContext", flaky_ctx)
+    gids = cat.add_targets(
+        rng.standard_normal((9, R)).astype(np.float32))  # overflow -> build
+    cat.flush()                                  # the build FAILED
+    assert cat.stats.n_compactions == 0
+    assert cat.stats.n_failed_compactions == 1   # recorded, not raised
+    assert isinstance(cat.last_build_error, RuntimeError)
+    assert len(cat._frozen) == 1                 # sealed chain intact
+    assert cat.num_live == 129
+    res, info = assert_exact(cat, U)             # frozen rows still served
+    assert info.n_segments >= 1
+    cat.delete_targets([int(gids[0])])           # mutations keep working
+    cat.add_targets(rng.standard_normal((8, R)).astype(np.float32))
+    cat.flush()                                  # second build succeeds
+    assert cat.stats.n_compactions == 1
+    assert not cat._frozen
+    assert cat.num_live == 136
+    assert_exact(cat, U)
+
+
+def test_noop_compact_keeps_snapshot_and_version():
+    """compact() with nothing to fold must not rebuild (a rebuild would
+    bump the version and invalidate every warmed engine executable)."""
+    cat = SegmentedCatalogue(_base(_rng(19), 50), block_size=16)
+    snap = cat.snapshot
+    cat.compact()
+    assert cat.snapshot is snap and cat.version == 0
+    assert cat.stats.n_compactions == 0
+
+
+def test_sync_build_failure_keeps_mutation_batches_atomic(monkeypatch):
+    """A synchronous build failure mid-mutation is recorded, not raised:
+    the batch completes (no row lost) and compact() surfaces the error."""
+    import repro.core.segments as seg_mod
+    rng = _rng(20)
+    cat = SegmentedCatalogue(_base(rng, 100), delta_capacity=8,
+                             block_size=16)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    cat.add_targets(rng.standard_normal((8, R)).astype(np.float32))
+    real_ctx = seg_mod.EngineContext
+    boom = {"armed": True}
+
+    def flaky_ctx(*args, **kwargs):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("simulated build failure")
+        return real_ctx(*args, **kwargs)
+
+    monkeypatch.setattr(seg_mod, "EngineContext", flaky_ctx)
+    new_row = rng.standard_normal((1, R)).astype(np.float32)
+    cat.update_targets([3], new_row)         # full delta -> failing build
+    assert cat.stats.n_failed_compactions == 1
+    assert cat.num_live == 108               # the update was NOT lost
+    res, _ = assert_exact(cat, U)
+    rows_live, gids_live = cat.as_dense()
+    np.testing.assert_array_equal(
+        rows_live[list(gids_live).index(3)], new_row[0])
+    cat.compact()                            # next build succeeds, folds all
+    assert cat.stats.n_compactions == 1 and not cat._frozen
+    assert_exact(cat, U)
+
+
+def test_compaction_never_blocks_mutations(monkeypatch):
+    """A second delta overflow while a build is in flight seals onto the
+    L0 chain and returns immediately — mutations never wait on a build,
+    and the chain drains (auto-refold) once builds catch up."""
+    import time as _time
+
+    import repro.core.segments as seg_mod
+    rng = _rng(18)
+    cat = SegmentedCatalogue(_base(rng, 150), delta_capacity=8,
+                             block_size=16, compact_async=True)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    real_ctx = seg_mod.EngineContext
+
+    def slow_ctx(*args, **kwargs):
+        _time.sleep(1.0)
+        return real_ctx(*args, **kwargs)
+
+    monkeypatch.setattr(seg_mod, "EngineContext", slow_ctx)
+    cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+    t0 = _time.perf_counter()
+    cat.add_targets(rng.standard_normal((16, R)).astype(np.float32))
+    assert _time.perf_counter() - t0 < 0.8   # sealed + returned, no join
+    assert_exact(cat, U)                     # base + chain + active served
+    cat.flush()                              # builds (incl. refold) drain
+    assert not cat._frozen
+    assert cat.stats.n_compactions >= 2
+    assert cat.num_live == 175
+    assert_exact(cat, U)
+
+
+def test_unknown_gid_raises():
+    rng = _rng(13)
+    cat = SegmentedCatalogue(_base(rng, 50), block_size=16)
+    cat.delete_targets([3])
+    with pytest.raises(KeyError):
+        cat.delete_targets([3])              # already dead
+    with pytest.raises(KeyError):
+        cat.update_targets([999], [np.zeros(R, np.float32)])
+    with pytest.raises(ValueError):
+        cat.add_targets(np.zeros((1, R + 1), np.float32))

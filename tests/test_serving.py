@@ -137,6 +137,89 @@ def test_server_norm_sharded_method():
     assert srv.stats["norm_sharded"].n_queries == 8
 
 
+def test_server_streaming_mutations_exact_and_stats():
+    """add/delete/update through TopKServer: results carry global ids,
+    match a freshly rebuilt server, and the mutation/latency stats fill."""
+    rng = np.random.default_rng(20)
+    model = random_model(rng, 1500, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64, delta_capacity=16)
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    srv.query(U, 10, "norm")
+    new_rows = (rng.standard_normal((5, 16)) * 2).astype(np.float32)
+    gids = srv.add_targets(new_rows)
+    assert list(gids) == [1500, 1501, 1502, 1503, 1504]
+    srv.delete_targets([0, 1])
+    srv.update_targets([10], rng.standard_normal((1, 16)).astype(np.float32))
+    res = srv.query(U, 10, "norm")
+    # fresh rebuild over the live set
+    rows, live_gids = srv.catalogue.as_dense()
+    from repro.core import SepLRModel
+    fresh = TopKServer(SepLRModel(jnp.asarray(rows)), max_batch=8,
+                       block_size=64)
+    ref = fresh.query(U, 10, "norm")
+    np.testing.assert_allclose(np.asarray(res.values),
+                               np.asarray(ref.values), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(res.indices),
+                                  live_gids[np.asarray(ref.indices)])
+    ms = srv.mutation_stats
+    assert ms["n_inserts"] == 5 and ms["n_deletes"] == 2
+    assert ms["n_updates"] == 1 and ms["n_tombstones"] == 3
+    assert ms["num_live"] == 1503
+    st = srv.stats["norm"]
+    assert st.delta_scored > 0
+    assert 0 < st.p50_us <= st.p99_us
+    assert len(st.lat_us_ring) == 2          # one entry per served batch
+
+
+def test_server_warmup_covers_delta_buckets_zero_retrace_post_insert():
+    """Satellite: warmup() warms the delta-capacity buckets, and the FIRST
+    query after an insert triggers 0 new traces (engine cache AND the
+    segmented tail cache, via trace_counts)."""
+    rng = np.random.default_rng(21)
+    model = random_model(rng, 1200, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64, delta_capacity=32)
+    srv.warmup(10, batch_sizes=(8,), engines=["norm", "bta"])
+    assert srv.trace_counts.get("segmented_tail", 0) > 0
+    warm = dict(srv.trace_counts)
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    # inserts walking the delta through several pow2 buckets
+    for n in (1, 1, 2, 4, 8, 16):
+        srv.add_targets(rng.standard_normal((n, 16)).astype(np.float32))
+        srv.query(U, 10, "norm")
+        srv.query(U, 10, "bta")
+        assert srv.trace_counts == warm, "post-insert query retraced"
+
+
+def test_server_latency_percentiles_ring_bounded():
+    from repro.serving.server import LATENCY_RING, ServeStats
+    s = ServeStats()
+    assert s.p50_us == 0.0                   # empty ring is well-defined
+    for i in range(2 * LATENCY_RING):
+        s.lat_us_ring.append(float(i))
+    assert len(s.lat_us_ring) == LATENCY_RING
+    assert s.p50_us >= LATENCY_RING          # old entries evicted
+    assert s.p50_us <= s.p95_us <= s.p99_us
+
+
+def test_server_compaction_off_hot_path_preserves_engine_exactness():
+    """Force delta overflow through the server; post-compaction queries
+    still match naive and the snapshot version advanced."""
+    rng = np.random.default_rng(22)
+    model = random_model(rng, 800, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64, delta_capacity=8)
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    for _ in range(4):
+        srv.add_targets(rng.standard_normal((5, 16)).astype(np.float32))
+        srv.delete_targets(srv.query(U, 1, "naive").indices[:1, 0].tolist())
+    ms = srv.mutation_stats
+    assert ms["n_compactions"] >= 2
+    assert ms["snapshot_version"] == ms["n_compactions"]
+    r = srv.query(U, 10, "bta")
+    r0 = srv.query(U, 10, "naive")
+    np.testing.assert_allclose(np.sort(r.values, axis=1),
+                               np.sort(r0.values, axis=1), atol=1e-4)
+
+
 def test_server_host_oracle_methods():
     """The registered numpy reference oracles serve (slowly) by name."""
     model = random_model(np.random.default_rng(11), 300, 8,
