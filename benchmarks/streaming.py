@@ -29,8 +29,14 @@ still in flight is fully charged.
 Reported per row: mutation+query throughput for both sides
 (``ops_per_s_*``), the speedup (acceptance floor: >= 10x at M >= 32k),
 per-batch latency percentiles from the server's bounded ring
-(p50/p95/p99), and the delta/compaction counters (max delta occupancy,
-compactions, tombstones, final snapshot version).
+(p50/p95/p99), the delta/compaction counters (max delta occupancy,
+compactions, tombstones, final snapshot version), and the
+argument-passing contract's acceptance fields (DESIGN.md §10):
+``engine_compiles_per_compaction`` — engine traces observed per
+compaction build, asserted 0 (warmed buckets make compaction
+compile-free) — plus ``compaction_s_total``/``compaction_s_mean``, the
+builds' wall-clock (before the refactor this carried ~0.5s/engine of
+recompiles per snapshot; now it is the index/layout rebuild alone).
 """
 import time
 
@@ -245,6 +251,15 @@ def run(quick: bool = True, rounds: int = None, save_as: str = "streaming",
             "n_tombstones_final": ms["n_tombstones"],
             "snapshot_version": ms["snapshot_version"],
             "num_live_final": ms["num_live"],
+            # compile-free compaction (DESIGN.md §10): engine traces per
+            # compaction build (0 = every build hit warmed buckets) and
+            # the builds' wall-clock, now index/layout rebuild only
+            "engine_compiles_total": ms["engine_compiles_total"],
+            "engine_compiles_per_compaction":
+                ms["engine_compiles_per_compaction"],
+            "compaction_s_total": ms["compaction_s_total"],
+            "compaction_s_mean": (ms["compaction_s_total"]
+                                  / max(ms["n_compactions"], 1)),
         })
     save_rows(save_as, rows_out)
     return rows_out
@@ -256,12 +271,20 @@ def main(quick: bool = True):
     r0 = rows[0]
     derived = (f"speedup={r0['speedup_vs_rebuild']:.1f}x,"
                f"compactions={r0['n_compactions']},"
+               f"compiles_per_compaction="
+               f"{r0['engine_compiles_per_compaction']:.0f},"
                f"p99={r0['p99_us']:.0f}us,exact_failures={bad or 'none'}")
     print(csv_line("streaming", 1e6 / r0["qps_segmented"], derived))
     assert not bad, f"segmented results diverged from rebuild oracle: {bad}"
     slow = [r["M"] for r in rows
             if r["M"] >= 32768 and r["speedup_vs_rebuild"] < 10.0]
     assert not slow, f"segmented < 10x rebuild-per-mutation at M={slow}"
+    # acceptance (DESIGN.md §10): warmed-bucket compactions retrace nothing
+    retraced = [r["M"] for r in rows
+                if r["n_compactions"] > 0
+                and r["engine_compiles_per_compaction"] != 0]
+    assert not retraced, \
+        f"compaction performed engine retraces at M={retraced}"
 
 
 if __name__ == "__main__":

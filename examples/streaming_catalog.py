@@ -63,5 +63,13 @@ st = srv.stats["norm"]
 print(f"served {st.n_queries} queries: {st.scores_per_query:.0f} scores/q "
       f"(of {ms['num_live']} live), p50={st.p50_us:.0f}us "
       f"p95={st.p95_us:.0f}us p99={st.p99_us:.0f}us")
-assert srv.mutation_stats["n_compactions"] >= 1, "stream never compacted"
+ms = srv.mutation_stats
+assert ms["n_compactions"] >= 1, "stream never compacted"
+# 4) Compaction is COMPILE-FREE (DESIGN.md §10): engines take the snapshot
+#    state as runtime args over warmed M-buckets, so folding mutations into
+#    a fresh snapshot re-dispatched every existing trace.
+print(f"compactions: {ms['n_compactions']}, engine compiles per "
+      f"compaction: {ms['engine_compiles_per_compaction']:.0f}, "
+      f"mean build {1e3 * ms['compaction_s_total'] / ms['n_compactions']:.0f}ms")
+assert ms["engine_compiles_per_compaction"] == 0, ms
 print("every mid-stream query matched a fresh full rebuild exactly.")

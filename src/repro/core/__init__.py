@@ -39,8 +39,10 @@ from repro.core.engines import (
     engine_names,
     get_engine,
     list_engines,
+    m_bucket,
     register_engine,
     select_engine,
+    trace_totals,
 )
 from repro.core.fagin import FaginStats, fagin_topk_np
 from repro.core.index import TopKIndex, build_index

@@ -72,7 +72,7 @@ def _pallas_tail_scorer(targets, u):
 
 def _two_phase_list_scan(targets, order_desc, t_sorted_desc, u, k,
                          block_size, max_blocks, max_rounds, layout,
-                         ta_rounds, tail_score_fn=None):
+                         ta_rounds, tail_score_fn=None, m_real=None):
     """Contiguous prefix phase chained into a gather-side tail phase.
 
     Phase 1 runs :func:`repro.core.strategies.list_prefix_strategy` over
@@ -83,16 +83,18 @@ def _two_phase_list_scan(targets, order_desc, t_sorted_desc, u, k,
     and a query that certifies inside the prefix (virtually all of them)
     never executes a tail iteration (DESIGN.md §7). Results and
     ``n_scored``/``depth`` are identical to the single-phase gather scan.
+    ``m_real`` (traced) flows into both phases when the index arrays are
+    M-bucket padded (DESIGN.md §10).
     """
     prefix = list_prefix_strategy(layout, t_sorted_desc, u, block_size,
-                                  ta_rounds=ta_rounds)
+                                  ta_rounds=ta_rounds, m_real=m_real)
     _, state = pruned_block_scan(
         targets, u, prefix, k, max_steps=max_blocks, max_rounds=max_rounds,
         return_state=True)
     tail = blocked_lists_strategy(order_desc, t_sorted_desc, u, block_size,
                                   rank_by_item=layout.rank_by_item,
                                   ta_rounds=ta_rounds,
-                                  score_fn=tail_score_fn)
+                                  score_fn=tail_score_fn, m_real=m_real)
     return pruned_block_scan(targets, u, tail, k, max_steps=max_blocks,
                              max_rounds=max_rounds, init_state=state)
 
@@ -111,6 +113,7 @@ def blocked_topk(
     rank_desc: Optional[Array] = None,
     layout=None,
     tail_pallas: bool = False,
+    m_real=None,
 ) -> TopKResult:
     """Exact top-K via the Block Threshold Algorithm (single query).
 
@@ -133,16 +136,22 @@ def blocked_topk(
         ``[R, B, R]`` tiles (no row gathers) and the scan only falls back
         to gathers past the prefix — identical results and counts
         (DESIGN.md §7).
+      m_real: optional TRACED real catalogue size when the index arrays
+        (and ``layout.rank_by_item``) are padded to an M-bucket
+        (DESIGN.md §10) — pad entries are never walked, scored, or
+        counted, so results equal the unpadded scan bit for bit.
     """
     if layout is not None and layout.prefix_steps(block_size) > 0:
         res = _two_phase_list_scan(targets, order_desc, t_sorted_desc, u,
                                    k, block_size, max_blocks, -1, layout,
                                    ta_rounds=False,
                                    tail_score_fn=_pallas_tail_scorer(
-                                       targets, u) if tail_pallas else None)
+                                       targets, u) if tail_pallas else None,
+                                   m_real=m_real)
     else:
         strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u,
-                                          block_size, rank_desc=rank_desc)
+                                          block_size, rank_desc=rank_desc,
+                                          m_real=m_real)
         res = pruned_block_scan(targets, u, strategy, k,
                                 max_steps=max_blocks)
     # public depth unit is list depth, not blocks
@@ -192,6 +201,7 @@ def chunked_ta_topk(
     max_rounds: int = -1,
     layout=None,
     tail_pallas: bool = False,
+    m_real=None,
 ) -> TopKResult:
     """Exact TA whose rounds are processed ``chunk`` at a time.
 
@@ -212,6 +222,9 @@ def chunked_ta_topk(
     the O(R*M) key precompute — chaining into a gather-side tail only for
     scans that outlive the prefix. Counts stay sequential-faithful on
     both phases (DESIGN.md §7).
+
+    ``m_real`` (traced) is the real catalogue size when the index arrays
+    are M-bucket padded (DESIGN.md §10); rounds past it never execute.
     """
     if (layout is not None and chunk > 1
             and layout.prefix_steps(chunk) > 0):
@@ -219,9 +232,11 @@ def chunked_ta_topk(
                                     k, chunk, -1, max_rounds, layout,
                                     ta_rounds=True,
                                     tail_score_fn=_pallas_tail_scorer(
-                                        targets, u) if tail_pallas else None)
+                                        targets, u) if tail_pallas else None,
+                                    m_real=m_real)
     strategy = blocked_lists_strategy(order_desc, t_sorted_desc, u, chunk,
-                                      rank_desc=rank_desc, ta_rounds=True)
+                                      rank_desc=rank_desc, ta_rounds=True,
+                                      m_real=m_real)
     # at chunk=1 the strategy degenerates to the plain blocked scan, whose
     # halting budget is counted in (single-round) steps
     return pruned_block_scan(targets, u, strategy, k,
@@ -260,6 +275,7 @@ def norm_pruned_topk_batched(
     k: int,
     block_size: int = 256,
     max_blocks: int = -1,
+    m_real=None,
 ) -> TopKResult:
     """Batched-native norm scan: ONE shared tile per step for the batch.
 
@@ -273,16 +289,25 @@ def norm_pruned_topk_batched(
     ``n_scored``/``depth`` equal its own sequential scan's; the loop runs
     until the slowest live query certifies.
 
+    ``m_real`` (traced) is the real catalogue size when the norm arrays
+    are M-bucket padded (pad rows zero, norm 0 — sorted last;
+    DESIGN.md §10): the tail block slides back against the real end, pad
+    rows are masked from the merge and the counters, and the runtime
+    step cap stops the loop exactly where the unpadded scan stops.
+
     Returns catalogue ids (rows are remapped through ``norm_order`` once,
     after the loop).
     """
     M, R = targets_by_norm.shape
+    m = M if m_real is None else m_real
     B = U.shape[0]
     k = min(k, M)
     n_steps = -(-M // block_size)
     cap = n_steps if max_blocks < 0 else min(max_blocks, n_steps)
+    cap_eff = cap if m_real is None else jnp.minimum(
+        cap, -(-m_real // block_size))
     next_starts = jnp.minimum(
-        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, M - 1)
+        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, m - 1)
     bound_norms = norms_sorted[next_starts]              # [n_steps]
     u_norms = jnp.linalg.norm(U, axis=1)                 # [B]
     offs = jnp.arange(block_size, dtype=jnp.int32)
@@ -290,18 +315,19 @@ def norm_pruned_topk_batched(
 
     def cond(s):
         step, _, _, _, _, lower, upper = s
-        return jnp.logical_and(step < cap, jnp.any(lower < upper))
+        return jnp.logical_and(step < cap_eff, jnp.any(lower < upper))
 
     def body(s):
         step, top_vals, top_ids, n_scored, depth, lower, upper = s
         live = lower < upper                             # [B]
         d0 = step * block_size
-        start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+        start = jnp.maximum(0, jnp.minimum(d0, m - block_size))
         tile = jax.lax.dynamic_slice_in_dim(targets_by_norm, start,
                                             block_size)  # [block, R]
         scores = U @ tile.T                              # [B, block]
         rows = start + offs
-        valid = rows >= d0          # tail block slides back; mask re-reads
+        # tail block slides back (mask re-reads); pad rows masked too
+        valid = jnp.logical_and(rows >= d0, rows < m)
         masked = jnp.where(valid[None, :], scores, neg_inf)
         new_vals, new_ids = merge_block_into_carry_batched(
             top_vals, top_ids, masked, rows, k)
@@ -341,6 +367,7 @@ def norm_pruned_topk(
     block_size: int = 256,
     max_blocks: int = -1,
     targets_by_norm: Optional[Array] = None,
+    m_real=None,
 ) -> TopKResult:
     """Exact top-K scanning blocks in decreasing-norm order.
 
@@ -355,10 +382,13 @@ def norm_pruned_topk(
     :func:`blocked_topk`). ``targets_by_norm``
     (:attr:`repro.core.index.TopKIndex.targets_by_norm`) turns the per-
     block row gather into a contiguous slice + matvec — same results,
-    Pallas-layout memory traffic.
+    Pallas-layout memory traffic. ``m_real`` (traced) is the real
+    catalogue size when the norm arrays are M-bucket padded
+    (DESIGN.md §10).
     """
     strategy = norm_block_strategy(norm_order, norms_sorted, u, block_size,
-                                   targets_by_norm=targets_by_norm)
+                                   targets_by_norm=targets_by_norm,
+                                   m_real=m_real)
     res = pruned_block_scan(targets, u, strategy, k, max_steps=max_blocks)
     if targets_by_norm is not None and targets.shape[0] >= block_size:
         # the slice path scans over norm-ordered ROW numbers (no id gather

@@ -198,6 +198,19 @@ class ScanStrategy:
         sequential algorithm.
       num_rounds: total sub-rounds in the exact scan (chunked mode only;
         e.g. M for TA).
+      num_steps_dynamic: optional TRACED tighter step cap (DESIGN.md §10).
+        Strategies over catalogue arrays padded to an M-bucket keep
+        ``num_steps`` static at the padded worst case (the while_loop
+        shape contract) and report the number of steps the REAL catalogue
+        needs here, as a runtime scalar derived from the ``m_real``
+        argument. The driver caps the loop at
+        ``min(num_steps, num_steps_dynamic)``, so pad rows beyond the
+        real catalogue are never enumerated and every counter stays
+        sequential-faithful to the unpadded scan.
+      num_rounds_dynamic: the same runtime cap in sub-rounds (chunked
+        mode): typically ``m_real`` for TA. Caps the per-chunk
+        ``cap_local`` masking, so a chunk straddling the real catalogue
+        end scores and counts only real rounds.
     """
 
     candidates: Callable[[Array], Tuple[Array, Array]]
@@ -208,6 +221,8 @@ class ScanStrategy:
     fresh_mask: Optional[Callable[[Array, Array, Array], Array]] = None
     rounds_per_step: int = 1
     num_rounds: Optional[int] = None
+    num_steps_dynamic: Optional[Array] = None
+    num_rounds_dynamic: Optional[Array] = None
 
 
 class ScanState(NamedTuple):
@@ -267,11 +282,26 @@ def pruned_block_scan(
         cap = min(cap, -(-round_cap // chunk))
     else:
         round_cap = cap
+    # Pad-aware halting (DESIGN.md §10): `cap`/`round_cap` above are STATIC
+    # (the padded worst case — while_loop shapes must not depend on the
+    # real catalogue size); strategies over M-bucket-padded arrays supply
+    # the real catalogue's step/round budget as traced scalars, and the
+    # loop condition uses the minimum. Pad rows therefore never execute a
+    # step, and `n_scored`/`depth` match the unpadded sequential scan.
+    cap_eff = cap
+    round_cap_eff = round_cap
+    if chunk > 1 and strategy.num_rounds_dynamic is not None:
+        round_cap_eff = jnp.minimum(round_cap,
+                                    strategy.num_rounds_dynamic)
+        cap_eff = jnp.minimum(cap_eff,
+                              (round_cap_eff + chunk - 1) // chunk)
+    if strategy.num_steps_dynamic is not None:
+        cap_eff = jnp.minimum(cap_eff, strategy.num_steps_dynamic)
     score = strategy.score or (lambda step, ids, active: targets[ids] @ u)
     use_visited = strategy.track_visited and strategy.fresh_mask is None
 
     def cond(s: ScanState):
-        return jnp.logical_and(s.step < cap, s.lower < s.upper)
+        return jnp.logical_and(s.step < cap_eff, s.lower < s.upper)
 
     def chunked_body(s: ScanState, ids, active, fresh, scores):
         """rounds_per_step sequential paper rounds from one gather+matvec.
@@ -289,8 +319,9 @@ def pruned_block_scan(
         """
         ubs = strategy.bound(s.step)              # [chunk] per-round bounds
         base_round = s.step * chunk
-        # rounds allowed by the halted budget, local to this chunk
-        cap_local = jnp.clip(round_cap - base_round, 0, chunk)
+        # rounds allowed by the halted budget (and the real, unpadded
+        # catalogue size), local to this chunk
+        cap_local = jnp.clip(round_cap_eff - base_round, 0, chunk)
         tags = jnp.tile(jnp.arange(chunk, dtype=jnp.int32),
                         scores.shape[0] // chunk)   # slot -> round (r-major)
         eligible = jnp.logical_and(fresh, tags < cap_local)
@@ -324,7 +355,7 @@ def pruned_block_scan(
         # per-query liveness: under vmap the lockstep loop keeps running for
         # the slowest query; frozen lanes must not mutate state (else the
         # paper's score-count metric is inflated for fast queries).
-        live = jnp.logical_and(s.step < cap, s.lower < s.upper)
+        live = jnp.logical_and(s.step < cap_eff, s.lower < s.upper)
         ids, active = strategy.candidates(s.step)
         if strategy.fresh_mask is not None:
             fresh = strategy.fresh_mask(s.step, ids, active)

@@ -10,25 +10,51 @@ bounds, sharded variants, approximate modes) become reachable from every
 layer by adding one ``register`` call.
 
 Engines run against an :class:`EngineContext` — the catalogue plus lazily
-built derived state (sorted-list index, Pallas catalogue) shared across
-queries, so a server builds it once and every engine reuses it.
+built derived state (sorted-list index, layouts, Pallas catalogue) shared
+across queries, so a server builds it once and every engine reuses it.
 
-**Compilation cache** (DESIGN.md §6): ``Engine.run`` dispatches through a
-persistent per-context ``jax.jit`` cache keyed by
-``(engine, k, batch-bucket)``. Batch sizes are bucketed to the next power
-of two (queries are padded by repeating the last row, results sliced
-back), so a serving process compiles each engine a handful of times total
-instead of re-tracing ``vmap`` closures on every call.
-:meth:`EngineContext.warmup` populates the cache ahead of traffic, and
-:attr:`EngineContext.trace_counts` counts actual traces per engine so
-tests can assert the cache is hit (0 new traces after warmup).
+**Argument-passing compilation contract** (DESIGN.md §10). Engines come
+in two kinds, distinguished by which :class:`Engine` fields they set:
 
-Every engine also declares the :mod:`repro.core.layout` it consumes
-(``Engine.layout``); :meth:`EngineContext.layout` builds layouts lazily
-and caches them per context, exactly like the sorted-list index. A
-``traffic`` estimator per engine turns measured ``n_scored``/``depth``
-into memory-traffic terms (rows gathered vs contiguous rows read,
-estimated bytes moved) for the benchmark sweep.
+* **Argument-passing engines** (``run_args`` + ``make_args``; ``naive``,
+  ``ta``, ``bta``, ``norm``, ``norm_sharded``): the compiled function is
+  a MODULE-LEVEL ``jax.jit`` executor shared by every context in the
+  process. Everything snapshot-shaped — catalogue rows, index arrays,
+  :mod:`repro.core.layout` pytrees — flows in as runtime ARGUMENTS
+  (built once per context by ``make_args``, padded to the power-of-two
+  M-bucket :func:`m_bucket`, cached by :meth:`EngineContext.engine_args`),
+  together with a traced ``m_real`` scalar carrying the real catalogue
+  size. The effective compile key is therefore
+  ``(engine, k, batch-bucket, M-bucket, layout-shape, config)`` — NO
+  snapshot version, no array identity — so a compacted snapshot of the
+  same bucket re-dispatches every existing trace: compaction is
+  compile-free (the streaming win this layer exists for, DESIGN.md §9).
+  Pad rows follow the conventions stated in :mod:`repro.core.layout`
+  and are never walked, scored, or counted (the ``m_real`` index
+  arithmetic in :mod:`repro.core.strategies`), so results and the
+  paper's ``n_scored``/``depth`` metrics are bit-identical to the
+  unpadded scan.
+
+* **Closure engines** (``make_batched``; ``pallas`` only): the factory
+  closes over context state that cannot yet cross a jit boundary as an
+  argument (the Pallas ``MIPSCatalog`` does host-side per-query block
+  pre-screening and owns the kernel grid), so the executable lives in a
+  per-context cache keyed ``(engine, k, batch-bucket, snapshot
+  version)`` — the PR-4 contract, retained only here. A compaction
+  serving ``pallas`` re-traces it; on-TPU argument-passing for the
+  kernel path is future work (ROADMAP).
+
+Batch sizes are bucketed to the next power of two by both kinds
+(:func:`batch_bucket`; queries padded by repeating the last row, results
+sliced back). :meth:`EngineContext.warmup` populates the caches ahead of
+traffic — optionally for LARGER M-buckets than the current catalogue's
+(``m_buckets=``), so a growing streaming catalogue crosses its next
+bucket boundary without a single new trace. :func:`trace_totals` exposes
+the process-wide per-engine trace counters the executors bump at trace
+time; :attr:`EngineContext.trace_counts` attributes deltas of those
+counters to the context whose call triggered them, so tests can assert
+cache hits (0 new traces after warmup, 0 across a same-bucket
+compaction).
 
 Registered engines:
 
@@ -48,10 +74,10 @@ name              exact  needs_index  backend   layout       algorithm
 ================  =====  ===========  ========  ===========  ==================================
 
 The two ``numpy`` rows are the paper-faithful host oracles: exact,
-host-only, never jitted or batched (``host_only=True``,
-``make_batched=None`` — they run as dispatch loops). Registering them
-makes ``list_engines()`` cover every implemented algorithm; the
-benchmark sweep skips ``backend="numpy"`` rows when timing.
+host-only, never jitted or batched (``host_only=True``, no executable —
+they run as dispatch loops). Registering them makes ``list_engines()``
+cover every implemented algorithm; the benchmark sweep skips
+``backend="numpy"`` rows when timing.
 
 ``auto`` picks per query batch: sparse batches go to ``ta`` (zero-weight
 lists are never walked, so TA's per-round work collapses to nnz(u)); dense
@@ -68,7 +94,7 @@ Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,14 +103,15 @@ import numpy as np
 from repro.core.blocked import (
     blocked_topk,
     chunked_ta_topk,
-    norm_pruned_topk,
     norm_pruned_topk_batched,
 )
+from repro.core.driver import NEG_INF
 from repro.core.index import TopKIndex, build_index
 from repro.core.layout import (DEFAULT_PREFIX_DEPTH,
                                LIST_LAYOUT_MIN_TARGETS,
-                               build_layout)
-from repro.core.naive import TopKResult, naive_topk
+                               build_layout, pad_rank_by_item,
+                               pad_zero_rows)
+from repro.core.naive import TopKResult
 
 Array = jnp.ndarray
 
@@ -92,6 +119,18 @@ Array = jnp.ndarray
 def batch_bucket(n: int) -> int:
     """Next power of two >= n — the compile-cache batch granularity."""
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+def m_bucket(m: int) -> int:
+    """Next power of two >= m — the compile-cache CATALOGUE granularity.
+
+    Argument-passing engines pad every catalogue-shaped array to this
+    bucket (DESIGN.md §10), so any two snapshots whose sizes share a
+    bucket share every compiled executable. Same arithmetic as
+    :func:`batch_bucket`, named separately because the two axes bucket
+    independently.
+    """
+    return batch_bucket(m)
 
 
 def pad_to_bucket(U: "Array") -> "Array":
@@ -109,6 +148,43 @@ def pad_to_bucket(U: "Array") -> "Array":
         return U
     pad = jnp.broadcast_to(U[b - 1:b], (bucket - b, U.shape[1]))
     return jnp.concatenate([U, pad], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide trace accounting + the shared argument-passing executors
+# ---------------------------------------------------------------------------
+
+#: Process-wide trace counters, bumped by every executor AT TRACE TIME
+#: (a jit cache hit adds nothing). Keyed by engine name. Contexts
+#: attribute deltas of these to their own ``trace_counts``; the streaming
+#: layer reads the totals around a compaction build to report
+#: ``engine_compiles_per_compaction`` (DESIGN.md §10).
+_TRACE_TOTALS: Dict[str, int] = {}
+
+
+def _note_trace(name: str) -> None:
+    _TRACE_TOTALS[name] = _TRACE_TOTALS.get(name, 0) + 1
+
+
+def trace_totals() -> Dict[str, int]:
+    """Snapshot of the process-wide per-engine trace counters."""
+    return dict(_TRACE_TOTALS)
+
+
+#: engine name -> the module-level jitted executor
+#: ``(args, U, *, k, cfg) -> TopKResult``. ONE executor per engine for
+#: the whole process: jax's own trace cache (keyed by arg shapes/dtypes/
+#: treedefs + the static ``k``/``cfg``) IS the compile cache, which is
+#: what makes it snapshot- and context-free.
+_ARG_EXECUTORS: Dict[str, Callable] = {}
+
+
+def _make_arg_executor(name: str, run_args: Callable) -> Callable:
+    def run(args, U, k, cfg):
+        _note_trace(name)
+        return run_args(args, U, k, cfg)
+
+    return jax.jit(run, static_argnames=("k", "cfg"))
 
 
 class EngineContext:
@@ -129,13 +205,13 @@ class EngineContext:
         other value is honoured as given (clamped to ``M``). See
         :attr:`resolved_prefix_depth`.
       version: snapshot version of the catalogue this context was built
-        from (DESIGN.md §9). The streaming layer
-        (:mod:`repro.core.segments`) builds one context per immutable
-        base snapshot under a monotonically increasing version; the
-        version participates in the compile-cache key so executables
-        compiled against one snapshot's pytrees can never be dispatched
-        against another's, even if a context object were ever shared
-        across snapshots.
+        from (DESIGN.md §9). Bookkeeping for the streaming layer
+        (:mod:`repro.core.segments`), which builds one context per
+        immutable base snapshot under a monotonically increasing
+        version. Since the argument-passing refactor (DESIGN.md §10) the
+        version participates ONLY in the legacy closure-engine compile
+        key (``pallas``); argument-passing executors are deliberately
+        version-free — that is what makes compaction compile-free.
     """
 
     def __init__(self, targets, index: Optional[TopKIndex] = None,
@@ -155,11 +231,19 @@ class EngineContext:
         self._catalog = None
         self._norm_decay = None
         self._layouts: Dict[str, object] = {}
-        # persistent compiled-executable cache: (engine, k, batch-bucket,
-        # snapshot version) -> jitted batched callable. trace_counts counts
-        # actual traces per engine name (bumped at trace time, so a cache
-        # hit adds nothing).
+        # (engine name, M-bucket) -> the runtime-args pytree handed to the
+        # shared executor. Built once per context; the arrays inside are
+        # the padded snapshot state (DESIGN.md §10).
+        self._engine_args: Dict[Tuple[str, int], Any] = {}
+        self._padded_index: Dict[int, Dict[str, Array]] = {}
+        # legacy per-context compiled cache, CLOSURE engines only
+        # (pallas): (engine, k, batch-bucket, snapshot version) -> jitted
+        # batched callable.
         self._compiled: Dict[Tuple[str, int, int, int], Callable] = {}
+        # traces ATTRIBUTED to this context: closure engines bump it
+        # directly at trace time; argument-passing calls add the delta of
+        # the process-wide totals their dispatch caused (a cache hit adds
+        # nothing — the compile-freeness assertions read exactly this).
         self.trace_counts: Dict[str, int] = {}
 
     @property
@@ -170,6 +254,14 @@ class EngineContext:
         the catalogue outgrows cache (``LIST_LAYOUT_MIN_TARGETS``) —
         below that the plain gather path is faster and the default stays
         on it. An explicit ``prefix_depth`` is always honoured.
+
+        Compile-key note (DESIGN.md §10): the resolved depth sets the
+        ``[R, P, R]`` prefix-tile shapes and is therefore the
+        "layout-shape" component of the argument-passing compile key.
+        At the adaptive default it is a constant (2048) for every
+        catalogue ≥ 32k, so compaction never changes it; an explicit
+        ``prefix_depth`` > the real size degrades gracefully (clamped,
+        at the cost of one retrace per distinct clamp).
         """
         if self.prefix_depth is None:
             if self.num_targets < LIST_LAYOUT_MIN_TARGETS:
@@ -183,7 +275,9 @@ class EngineContext:
         ``list_major`` resolves the context's ``prefix_depth``;
         ``norm_sharded`` deals the norm order over all visible devices on
         a 1-axis ``("data",)`` mesh (a 1-device mesh is valid — the
-        sharded engine then degenerates to the single-host scan).
+        sharded engine then degenerates to the single-host scan), with
+        slabs sized for the M-bucket so the sharded executor's compile
+        key is bucket-granular.
         """
         lay = self._layouts.get(name)
         if lay is None:
@@ -194,6 +288,7 @@ class EngineContext:
                 mesh = self.mesh
                 params["n_shards"] = mesh.devices.size
                 params["mesh"] = mesh
+                params["m_total"] = self.m_bucket
             index = None if name == "row_major" else self.index
             lay = build_layout(name, self.targets, index, **params)
             self._layouts[name] = lay
@@ -210,6 +305,11 @@ class EngineContext:
     @property
     def num_targets(self) -> int:
         return int(self.targets.shape[0])
+
+    @property
+    def m_bucket(self) -> int:
+        """The catalogue's power-of-two M-bucket (DESIGN.md §10)."""
+        return m_bucket(self.num_targets)
 
     @property
     def index(self) -> TopKIndex:
@@ -241,18 +341,116 @@ class EngineContext:
             self._norm_decay = decayed / head
         return self._norm_decay
 
-    # -- compilation cache ---------------------------------------------------
+    # -- argument-passing machinery (DESIGN.md §10) --------------------------
+
+    @property
+    def m_real(self) -> Array:
+        """The real catalogue size as a traced int32 scalar (the runtime
+        companion of every M-bucket-padded argument array)."""
+        return jnp.int32(self.num_targets)
+
+    def padded_index_arrays(self, bucket: int) -> Dict[str, Array]:
+        """The sorted-list index + catalogue, padded to ``bucket`` rows.
+
+        The pad convention (DESIGN.md §10, shared with
+        :func:`repro.core.layout.pad_rank_by_item`): pad TARGET rows are
+        zero; each sorted list is extended past its real end with the
+        pad ids in id order (so ``rank[r, order[r, d]] == d`` holds over
+        the whole padded array); ``t_sorted_desc`` pad columns repeat
+        the last real value (monotone, and unread — every bound lookup
+        is ``m_real``-clamped). Cached per bucket.
+        """
+        arrs = self._padded_index.get(bucket)
+        if arrs is None:
+            idx = self.index
+            m = self.num_targets
+            pad = bucket - m
+            if pad < 0:
+                raise ValueError(
+                    f"bucket {bucket} smaller than catalogue ({m})")
+            if pad == 0:
+                arrs = {"targets": self.targets,
+                        "order_desc": idx.order_desc,
+                        "t_sorted_desc": idx.t_sorted_desc,
+                        "rank_desc": idx.rank_desc}
+            else:
+                r = int(self.targets.shape[1])
+                pad_ids = jnp.arange(m, bucket, dtype=jnp.int32)
+                pad_cols = jnp.broadcast_to(pad_ids[None, :], (r, pad))
+                arrs = {
+                    "targets": pad_zero_rows(self.targets, bucket),
+                    "order_desc": jnp.concatenate(
+                        [idx.order_desc, pad_cols], axis=1),
+                    "t_sorted_desc": jnp.concatenate(
+                        [idx.t_sorted_desc,
+                         jnp.broadcast_to(idx.t_sorted_desc[:, -1:],
+                                          (r, pad))], axis=1),
+                    "rank_desc": jnp.concatenate(
+                        [idx.rank_desc, pad_cols], axis=1),
+                }
+            self._padded_index[bucket] = arrs
+        return arrs
+
+    def engine_args(self, engine: "Engine", bucket: Optional[int] = None,
+                    cache: bool = True):
+        """The runtime-args pytree for ``engine`` at an M-bucket.
+
+        ``bucket`` defaults to the catalogue's own :attr:`m_bucket`;
+        warmup may request a LARGER bucket to pre-compile for future
+        growth (``cache=False`` then avoids pinning the oversized arrays
+        in this context). Cached per (engine, bucket).
+        """
+        bucket = self.m_bucket if bucket is None else int(bucket)
+        if bucket < self.num_targets:
+            raise ValueError(
+                f"bucket {bucket} smaller than catalogue "
+                f"({self.num_targets})")
+        key = (engine.name, bucket)
+        args = self._engine_args.get(key)
+        if args is None:
+            if engine.make_args is None:
+                raise ValueError(
+                    f"engine {engine.name!r} is not argument-passing")
+            args = engine.make_args(self, bucket)
+            if cache:
+                self._engine_args[key] = args
+        return args
+
+    def _dispatch_args(self, engine: "Engine", args, U: Array,
+                      k: int) -> TopKResult:
+        """Run the shared executor, attributing any trace to this context."""
+        cfg = engine.arg_config(self) if engine.arg_config is not None \
+            else ()
+        fn = _ARG_EXECUTORS[engine.name]
+        before = _TRACE_TOTALS.get(engine.name, 0)
+        res = fn(args, U, k=int(k), cfg=cfg)
+        delta = _TRACE_TOTALS.get(engine.name, 0) - before
+        if delta:
+            self.trace_counts[engine.name] = (
+                self.trace_counts.get(engine.name, 0) + delta)
+        return res
+
+    # -- legacy closure compilation cache (pallas only) ----------------------
 
     def compiled(self, engine: "Engine", k: int, batch: int) -> Callable:
-        """The persistent jitted executable for
-        (engine, k, batch-bucket, snapshot version).
+        """A compiled ``U -> TopKResult`` for (engine, k, batch-bucket).
 
-        Built once per key: the engine's ``make_batched`` factory is called
-        EAGERLY (so lazy context state — index, Pallas catalogue — is
-        constructed outside the trace) and the result is wrapped in a
-        ``jax.jit`` that survives across queries. The wrapper bumps
-        ``trace_counts[engine]`` at trace time only.
+        Argument-passing engines return a thin binding of the shared
+        module-level executor to this context's cached args (nothing is
+        compiled per context). Closure engines (pallas) keep the PR-4
+        per-context cache keyed ``(engine, k, batch-bucket, snapshot
+        version)``: the factory is called EAGERLY (so lazy context state
+        — index, Pallas catalogue — is constructed outside the trace)
+        and the result wrapped in a ``jax.jit`` that survives across
+        queries, bumping ``trace_counts[engine]`` at trace time only.
         """
+        if engine.run_args is not None:
+            args = self.engine_args(engine)
+
+            def bound_fn(U, _eng=engine, _args=args, _k=int(k)):
+                return self._dispatch_args(_eng, _args, U, _k)
+
+            return bound_fn
         key = (engine.name, int(k), int(batch), self.version)
         fn = self._compiled.get(key)
         if fn is None:
@@ -265,6 +463,7 @@ class EngineContext:
 
             def traced(U, _inner=batched, _name=name):
                 self.trace_counts[_name] = self.trace_counts.get(_name, 0) + 1
+                _note_trace(_name)
                 return _inner(U)
 
             fn = jax.jit(traced)
@@ -284,45 +483,82 @@ class EngineContext:
             U = jnp.atleast_2d(jnp.asarray(U, self.targets.dtype))
         b = U.shape[0]
         bucket = batch_bucket(b)
-        fn = self.compiled(engine, k, bucket)
         if bucket != b:
             U = pad_to_bucket(U)
-        res = fn(U)
+        if engine.run_args is not None:
+            res = self._dispatch_args(engine, self.engine_args(engine),
+                                      U, k)
+        else:
+            res = self.compiled(engine, k, bucket)(U)
         if bucket != b:
             res = jax.tree_util.tree_map(lambda a: a[:b], res)
         return res
 
     def warmup(self, k: int, batch_sizes=(1, 8, 64),
-               engines: Optional[List[str]] = None) -> "EngineContext":
-        """Compile (engine, k, bucket) executables ahead of traffic.
+               engines: Optional[List[str]] = None,
+               m_buckets=None) -> "EngineContext":
+        """Compile (engine, k, batch-bucket, M-bucket) executables ahead
+        of traffic.
 
-        Runs one representative batch per bucket through each non-dispatch
-        engine so the first real query hits a compiled executable. Returns
-        self for chaining.
+        Runs one representative batch per bucket through each executable
+        engine so the first real query hits a compiled executable.
+        ``m_buckets`` optionally lists CATALOGUE buckets to warm beyond
+        the current one (values below it are clamped up): argument-
+        passing traces are keyed by bucket, not by size, so warming the
+        next bucket now makes the compaction that eventually crosses
+        into it compile-free too (the streaming serving pattern,
+        DESIGN.md §10). Oversized buckets are padded views built
+        transiently — they are not pinned in this context's args cache.
+        Returns self for chaining.
         """
         names = list(engines) if engines is not None else [
-            e.name for e in list_engines() if e.make_batched is not None]
+            e.name for e in list_engines() if e.has_executable]
         r = int(self.targets.shape[1])
+        own = self.m_bucket
+        if m_buckets is None:
+            buckets_m = [own]
+        else:
+            buckets_m = sorted({max(int(x), own) for x in m_buckets})
         for name in names:
             eng = get_engine(name)
-            for b in batch_sizes:
-                bucket = batch_bucket(b)
-                U = jnp.ones((bucket, r), self.targets.dtype)
-                res = self.compiled(eng, int(k), bucket)(U)
-                jax.block_until_ready(res.values)
+            if eng.run_args is not None:
+                for mb in buckets_m:
+                    args = self.engine_args(eng, mb, cache=(mb == own))
+                    for b in batch_sizes:
+                        bucket = batch_bucket(b)
+                        U = jnp.ones((bucket, r), self.targets.dtype)
+                        res = self._dispatch_args(eng, args, U, k)
+                        jax.block_until_ready(res.values)
+            else:
+                for b in batch_sizes:
+                    bucket = batch_bucket(b)
+                    U = jnp.ones((bucket, r), self.targets.dtype)
+                    res = self.compiled(eng, int(k), bucket)(U)
+                    jax.block_until_ready(res.values)
         return self
 
 
 @dataclasses.dataclass(frozen=True)
 class Engine:
-    """A registered engine: batched-executable factory + capability metadata.
+    """A registered engine: executable factory + capability metadata.
 
-    ``make_batched(ctx, k)`` returns a pure ``U [B, R] -> TopKResult``
-    callable (trace-safe; any host-side setup such as index construction
-    happens inside the factory, eagerly). ``run`` dispatches through the
-    context's compilation cache. Dispatch pseudo-engines (``auto``) and
-    host-only reference oracles (``fagin``, ``partial``) set ``dispatch``
-    instead and route per batch — host oracles are never jitted.
+    Exactly one of three execution styles (DESIGN.md §10):
+
+    * ``run_args`` + ``make_args`` (+ optional ``arg_config``) — an
+      ARGUMENT-PASSING engine. ``make_args(ctx, m_bucket)`` returns the
+      runtime pytree of padded snapshot state; ``run_args(args, U, k,
+      cfg)`` is the pure batched body the module-level shared executor
+      jits (``k`` and the hashable ``cfg`` from ``arg_config(ctx)`` are
+      static). Its compile key carries no snapshot identity — every
+      same-bucket snapshot shares every trace.
+    * ``make_batched(ctx, k)`` — a CLOSURE engine: returns a pure
+      ``U [B, R] -> TopKResult`` callable that closes over context state
+      (trace-safe; any host-side setup such as index construction
+      happens inside the factory, eagerly), compiled per context with
+      the snapshot version in the key.
+    * ``dispatch(ctx, U, k)`` — dispatch pseudo-engines (``auto``) and
+      host-only reference oracles (``fagin``, ``partial``), routed per
+      batch, never jitted.
 
     ``layout`` names the :mod:`repro.core.layout` the engine consumes
     (built via :meth:`EngineContext.layout`); ``traffic`` estimates the
@@ -338,6 +574,10 @@ class Engine:
     ] = None
     dispatch: Optional[
         Callable[["EngineContext", Array, int], TopKResult]] = None
+    make_args: Optional[Callable[["EngineContext", int], Any]] = None
+    run_args: Optional[
+        Callable[[Any, Array, int, tuple], TopKResult]] = None
+    arg_config: Optional[Callable[["EngineContext"], tuple]] = None
     exact: bool = True
     needs_index: bool = True
     supports_batch: bool = True
@@ -347,6 +587,12 @@ class Engine:
     traffic: Optional[
         Callable[["EngineContext", TopKResult], Dict[str, float]]] = None
     description: str = ""
+
+    @property
+    def has_executable(self) -> bool:
+        """True for engines with a compiled batched body (everything but
+        the dispatch pseudo-engines and the host oracles)."""
+        return self.run_args is not None or self.make_batched is not None
 
     def run(self, ctx: EngineContext, U: Array, k: int) -> TopKResult:
         if self.dispatch is not None:
@@ -365,6 +611,9 @@ _ALIASES: Dict[str, str] = {
 
 def register_engine(engine: Engine) -> Engine:
     _REGISTRY[engine.name] = engine
+    if engine.run_args is not None:
+        _ARG_EXECUTORS[engine.name] = _make_arg_executor(engine.name,
+                                                         engine.run_args)
     return engine
 
 
@@ -401,13 +650,25 @@ def list_engines(exact: Optional[bool] = None,
 # ---------------------------------------------------------------------------
 
 
-def _naive_batched(ctx: EngineContext, k: int):
-    targets = ctx.targets
+def _naive_args(ctx: EngineContext, bucket: int):
+    return {"targets": pad_zero_rows(ctx.targets, bucket),
+            "m_real": ctx.m_real}
 
-    def fn(U):
-        return naive_topk(targets, U, k)
 
-    return fn
+def _naive_run(args, U, k, cfg):
+    T, m = args["targets"], args["m_real"]
+    mb = T.shape[0]
+    scores = U @ T.T
+    # pad rows are zero rows: mask them to -inf so they can never outrank
+    # a real (possibly all-negative) score
+    scores = jnp.where(jnp.arange(mb, dtype=jnp.int32)[None, :] < m,
+                       scores, NEG_INF)
+    vals, ids = jax.lax.top_k(scores, min(k, mb))
+    ids = jnp.where(jnp.isneginf(vals), -1, ids)
+    b = U.shape[0]
+    return TopKResult(vals, ids,
+                      jnp.broadcast_to(m, (b,)).astype(jnp.int32),
+                      jnp.zeros((b,), jnp.int32))
 
 
 def _list_layout(ctx: EngineContext):
@@ -416,78 +677,123 @@ def _list_layout(ctx: EngineContext):
         else None
 
 
-def _ta_batched(ctx: EngineContext, k: int):
+def _tail_pallas(ctx: EngineContext) -> bool:
+    # gather-fused Pallas tail scoring only pays on real TPU backends
+    return (jax.default_backend() == "tpu"
+            and ctx.resolved_prefix_depth > 0)
+
+
+def _list_args(ctx: EngineContext, bucket: int):
+    """Shared args for the list engines: padded index + padded layout."""
+    args = dict(ctx.padded_index_arrays(bucket))
+    lay = _list_layout(ctx)
+    if lay is not None:
+        lay = dataclasses.replace(
+            lay, rank_by_item=pad_rank_by_item(lay.rank_by_item, bucket))
+    args["layout"] = lay
+    args["m_real"] = ctx.m_real
+    return args
+
+
+def _ta_cfg(ctx: EngineContext) -> tuple:
+    return (ctx.ta_chunk, ctx.max_blocks, _tail_pallas(ctx))
+
+
+def _ta_run(args, U, k, cfg):
     # chunked TA: block-shaped work per step, sequential-round accounting
     # (count-faithful to the paper's Algorithm 2). With the list_major
     # layout the rounds inside the prefix are gather-free (DESIGN.md §7).
-    idx = ctx.index
-    targets = ctx.targets
-    chunk = ctx.ta_chunk
-    max_rounds = ctx.max_blocks
-    layout = _list_layout(ctx)
-    # gather-fused Pallas tail scoring only pays on real TPU backends
-    tail_pallas = jax.default_backend() == "tpu" and layout is not None
+    chunk, max_rounds, tail_pallas = cfg
 
     def one(u):
-        return chunked_ta_topk(targets, idx.order_desc, idx.t_sorted_desc,
-                               idx.rank_desc, u, k, chunk=chunk,
-                               max_rounds=max_rounds, layout=layout,
-                               tail_pallas=tail_pallas)
+        return chunked_ta_topk(args["targets"], args["order_desc"],
+                               args["t_sorted_desc"], args["rank_desc"],
+                               u, k, chunk=chunk, max_rounds=max_rounds,
+                               layout=args["layout"],
+                               tail_pallas=tail_pallas,
+                               m_real=args["m_real"])
 
-    return jax.vmap(one)
+    return jax.vmap(one)(U)
 
 
-def _bta_batched(ctx: EngineContext, k: int):
-    idx = ctx.index
-    targets = ctx.targets
-    block_size, max_blocks = ctx.block_size, ctx.max_blocks
-    layout = _list_layout(ctx)
-    tail_pallas = jax.default_backend() == "tpu" and layout is not None
+def _bta_cfg(ctx: EngineContext) -> tuple:
+    return (ctx.block_size, ctx.max_blocks, _tail_pallas(ctx))
+
+
+def _bta_run(args, U, k, cfg):
+    block_size, max_blocks, tail_pallas = cfg
 
     def one(u):
-        return blocked_topk(targets, idx.order_desc, idx.t_sorted_desc, u,
-                            k, block_size, max_blocks,
-                            rank_desc=idx.rank_desc, layout=layout,
-                            tail_pallas=tail_pallas)
+        return blocked_topk(args["targets"], args["order_desc"],
+                            args["t_sorted_desc"], u, k, block_size,
+                            max_blocks, rank_desc=args["rank_desc"],
+                            layout=args["layout"],
+                            tail_pallas=tail_pallas,
+                            m_real=args["m_real"])
 
-    return jax.vmap(one)
+    return jax.vmap(one)(U)
 
 
-def _norm_batched(ctx: EngineContext, k: int):
+def _norm_args(ctx: EngineContext, bucket: int):
     lay = ctx.layout("norm_major")
-    targets = ctx.targets
-    block_size, max_blocks = ctx.block_size, ctx.max_blocks
-    if targets.shape[0] >= block_size:
-        # batched-native scan: every query walks the SAME norm-ordered
-        # prefix, so one shared tile slice + one [B,R]@[R,block] matmul
-        # serves the whole batch (no per-query gathers)
-        def fn(U):
-            return norm_pruned_topk_batched(
-                lay.targets_by_norm, lay.norm_order, lay.norms_sorted, U,
-                k, block_size, max_blocks)
-
-        return fn
-
-    def one(u):
-        return norm_pruned_topk(targets, lay.norm_order, lay.norms_sorted,
-                                u, k, block_size, max_blocks,
-                                targets_by_norm=lay.targets_by_norm)
-
-    return jax.vmap(one)
+    m = ctx.num_targets
+    pad = bucket - m
+    if pad == 0:
+        return {"targets_by_norm": lay.targets_by_norm,
+                "norm_order": lay.norm_order,
+                "norms_sorted": lay.norms_sorted,
+                "m_real": ctx.m_real}
+    # pad rows: zero rows with norm 0 and id -1 — they sort last, so the
+    # real norm-order prefix (and every Cauchy-Schwarz bound the scan can
+    # reach) is untouched
+    return {
+        "targets_by_norm": pad_zero_rows(lay.targets_by_norm, bucket),
+        "norm_order": jnp.concatenate(
+            [lay.norm_order, jnp.full((pad,), -1, jnp.int32)]),
+        "norms_sorted": pad_zero_rows(lay.norms_sorted, bucket),
+        "m_real": ctx.m_real,
+    }
 
 
-def _norm_sharded_batched(ctx: EngineContext, k: int):
+def _norm_cfg(ctx: EngineContext) -> tuple:
+    return (ctx.block_size, ctx.max_blocks)
+
+
+def _norm_run(args, U, k, cfg):
+    block_size, max_blocks = cfg
+    mb = args["targets_by_norm"].shape[0]
+    # batched-native scan: every query walks the SAME norm-ordered
+    # prefix, so one shared tile slice + one [B,R]@[R,block] matmul
+    # serves the whole batch (no per-query gathers). Tiny catalogues
+    # shrink the block to the bucket so the slice stays in bounds.
+    return norm_pruned_topk_batched(
+        args["targets_by_norm"], args["norm_order"], args["norms_sorted"],
+        U, k, min(block_size, mb), max_blocks, m_real=args["m_real"])
+
+
+def _norm_sharded_args(ctx: EngineContext, bucket: int):
+    if bucket == ctx.m_bucket:
+        lay = ctx.layout("norm_sharded")
+    else:
+        mesh = ctx.mesh
+        lay = build_layout("norm_sharded", ctx.targets, ctx.index,
+                          n_shards=mesh.devices.size, mesh=mesh,
+                          m_total=bucket)
+    return {"targets_sharded": lay.targets_sharded,
+            "norms_sharded": lay.norms_sharded,
+            "ids_sharded": lay.ids_sharded}
+
+
+def _norm_sharded_cfg(ctx: EngineContext) -> tuple:
+    return (ctx.block_size, ctx.max_blocks, ctx.mesh)
+
+
+def _norm_sharded_run(args, U, k, cfg):
     from repro.core.sharded import sharded_norm_topk
-    lay = ctx.layout("norm_sharded")
-    mesh = ctx.mesh
-    block_size, max_blocks = ctx.block_size, ctx.max_blocks
+    block_size, max_blocks, mesh = cfg
     scan = sharded_norm_topk(mesh, ("data",))
-
-    def fn(U):
-        return scan(lay.targets_sharded, lay.norms_sharded,
-                    lay.ids_sharded, U, k, block_size, max_blocks)
-
-    return fn
+    return scan(args["targets_sharded"], args["norms_sharded"],
+                args["ids_sharded"], U, k, block_size, max_blocks)
 
 
 def _pallas_batched(ctx: EngineContext, k: int):
@@ -642,30 +948,35 @@ def _host_traffic(ctx, res):
 
 
 register_engine(Engine(
-    name="naive", make_batched=_naive_batched, exact=True, needs_index=False,
+    name="naive", make_args=_naive_args, run_args=_naive_run,
+    exact=True, needs_index=False,
     supports_batch=True, backend="jax", layout="row_major",
     traffic=_naive_traffic,
     description="full matmul + lax.top_k (strongest wall-clock baseline)"))
 register_engine(Engine(
-    name="ta", make_batched=_ta_batched, exact=True, needs_index=True,
+    name="ta", make_args=_list_args, run_args=_ta_run, arg_config=_ta_cfg,
+    exact=True, needs_index=True,
     supports_batch=True, backend="jax", layout="list_major",
     traffic=_list_traffic,
     description="Threshold Algorithm rounds (paper Alg. 2; chunked "
                 "execution, sequential-round accounting, contiguous "
                 "list-prefix tiles)"))
 register_engine(Engine(
-    name="bta", make_batched=_bta_batched, exact=True, needs_index=True,
+    name="bta", make_args=_list_args, run_args=_bta_run,
+    arg_config=_bta_cfg, exact=True, needs_index=True,
     supports_batch=True, backend="jax", layout="list_major",
     traffic=_list_traffic,
     description="Block Threshold Algorithm (MXU-shaped TA, contiguous "
                 "list-prefix tiles)"))
 register_engine(Engine(
-    name="norm", make_batched=_norm_batched, exact=True, needs_index=True,
+    name="norm", make_args=_norm_args, run_args=_norm_run,
+    arg_config=_norm_cfg, exact=True, needs_index=True,
     supports_batch=True, backend="jax", layout="norm_major",
     traffic=_norm_traffic,
     description="Cauchy-Schwarz norm-ordered block scan"))
 register_engine(Engine(
-    name="norm_sharded", make_batched=_norm_sharded_batched, exact=True,
+    name="norm_sharded", make_args=_norm_sharded_args,
+    run_args=_norm_sharded_run, arg_config=_norm_sharded_cfg, exact=True,
     needs_index=True, supports_batch=True, backend="jax",
     layout="norm_sharded", traffic=_norm_traffic,
     description="shared-tile norm scan under shard_map with cross-shard "
@@ -675,7 +986,9 @@ register_engine(Engine(
     supports_batch=True, backend="pallas", layout="norm_major",
     traffic=_norm_traffic,
     description="norm-ordered block scan as a Pallas TPU kernel with "
-                "two-level DMA-skipping bounds (interpret-mode on CPU)"))
+                "two-level DMA-skipping bounds (interpret-mode on CPU; "
+                "closure-compiled — the one engine whose compile key "
+                "still carries the snapshot version)"))
 register_engine(Engine(
     name="fagin", dispatch=_host_oracle_dispatch(_fagin_one), exact=True,
     needs_index=True, supports_batch=False, backend="numpy",

@@ -48,6 +48,21 @@ Three single-host layouts plus one sharded layout:
 
 Layouts holding only jax arrays are registered as pytrees (static config
 in the aux data) so they can cross ``jax.jit`` boundaries.
+
+**Layouts as runtime arguments** (DESIGN.md §10): since PR 5 the engine
+executors take layouts as runtime pytree ARGUMENTS rather than closing
+over them as jit constants, and catalogue-shaped arrays are padded to a
+power-of-two M-bucket (:func:`repro.core.engines.m_bucket`) so that a
+compacted snapshot of the same bucket re-dispatches every existing trace
+— compile-free compaction. The pad-row convention every padded array
+follows: pad TARGET rows are zero, pad NORM entries carry norm ``0`` and
+id ``-1`` (they sort last, so norm-order prefixes are untouched), and
+pad LIST entries sit past the real list ends at their own padded
+position (``rank == position``), which makes them unreachable to the
+``m_real``-clamped index arithmetic in :mod:`repro.core.strategies`.
+:func:`pad_rank_by_item` and the ``m_total`` parameter of
+:func:`build_norm_sharded` implement that convention here; each layout's
+docstring states its own pad-row semantics.
 """
 
 from __future__ import annotations
@@ -79,7 +94,12 @@ LIST_LAYOUT_MIN_TARGETS = 32768
 
 @dataclasses.dataclass(frozen=True)
 class RowMajorLayout:
-    """The catalogue exactly as given; scoring a block is a row gather."""
+    """The catalogue exactly as given; scoring a block is a row gather.
+
+    Pad/compile-key note (DESIGN.md §10): the ``naive`` engine pads
+    ``targets`` to the M-bucket with zero rows and masks their scores to
+    −∞ before the merge — its compile key is the bucket, never M.
+    """
 
     targets: Array
 
@@ -88,7 +108,15 @@ class RowMajorLayout:
 
 @dataclasses.dataclass(frozen=True)
 class NormMajorLayout:
-    """Decreasing-norm permutation: a norm block is a contiguous slice."""
+    """Decreasing-norm permutation: a norm block is a contiguous slice.
+
+    Pad/compile-key note (DESIGN.md §10): the ``norm`` engine pads all
+    three arrays to the M-bucket — zero rows, norm ``0``, id ``-1`` —
+    which sort to the END of the norm order, so the real prefix (and
+    every Cauchy-Schwarz bound a scan can reach before its
+    ``m_real``-capped stop) is untouched. The padded shapes are the
+    layout's whole contribution to the executor's compile key.
+    """
 
     norm_order: Array       # [M] int32 — item ids by decreasing L2 norm
     norms_sorted: Array     # [M] — norms in that order
@@ -120,8 +148,14 @@ class ListMajorLayout:
       rank_by_item: ``[M, R]`` int32 — ``rank_desc`` transposed so one
         item's positions in ALL lists are a contiguous row; the
         post-prefix freshness fallback gathers these instead of
-        depending on an O(R*M) per-query key precompute.
-      prefix_depth: P (static).
+        depending on an O(R*M) per-query key precompute. The engine
+        layer hands the executors a copy padded to the M-bucket via
+        :func:`pad_rank_by_item` (pad rank == pad position, so pads can
+        never test fresh).
+      prefix_depth: P (static — lives in the pytree aux data, so it is
+        automatically the "layout-shape" component of the
+        argument-passing compile key, DESIGN.md §10; at the adaptive
+        default it is the constant 2048 for every catalogue ≥ 32k).
     """
 
     head_rows: Array
@@ -148,7 +182,13 @@ class ShardedNormLayout:
     shard s's slab, itself in decreasing-norm order (a strided deal of
     the global norm order, so every shard sees the global spectrum
     decimated — per-shard Cauchy-Schwarz bounds stay tight everywhere).
-    Slabs are padded to equal length with zero rows carrying id -1.
+    Slabs are padded to equal length with zero rows carrying id -1 — the
+    same rows the engine layer's M-bucket padding appends
+    (``build_norm_sharded(m_total=bucket)``, DESIGN.md §10), so the
+    sharded scan needs exactly one pad convention: mask ``id < 0`` and
+    stop at the per-slab real-row cap. The slab shapes (set by
+    ``m_total``/``n_shards``) are this layout's compile-key
+    contribution.
     """
 
     targets_sharded: Array  # [n*m_local, R]
@@ -183,6 +223,39 @@ _register(ShardedNormLayout, ("n_shards",))
 # ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
+
+
+def pad_zero_rows(arr: Array, m_bucket: int) -> Array:
+    """Pad a catalogue-shaped array (leading axis M) to ``m_bucket`` with
+    zeros — THE zero-pad convention of DESIGN.md §10 (pad target rows
+    are zero, pad norms are 0), shared by every engine-args builder so
+    the invariant lives in one place. No-op when already at the bucket.
+    """
+    m = arr.shape[0]
+    if m_bucket <= m:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.zeros((m_bucket - m,) + arr.shape[1:], arr.dtype)],
+        axis=0)
+
+
+def pad_rank_by_item(rank_by_item: Array, m_bucket: int) -> Array:
+    """Pad ``rank_by_item [M, R]`` rows up to ``m_bucket`` (DESIGN.md §10).
+
+    Pad item ``j`` gets rank ``j`` in EVERY list — i.e. pads extend each
+    sorted list past its real end in id order, preserving the
+    order/rank inverse-permutation invariant over the padded arrays. A
+    pad rank is ``>= m_real`` by construction, so no ``m_real``-clamped
+    walk position, freshness key, or bound lookup can ever resolve to a
+    pad entry.
+    """
+    m, r = rank_by_item.shape
+    if m_bucket <= m:
+        return rank_by_item
+    pad = jnp.broadcast_to(
+        jnp.arange(m, m_bucket, dtype=rank_by_item.dtype)[:, None],
+        (m_bucket - m, r))
+    return jnp.concatenate([rank_by_item, pad], axis=0)
 
 
 def build_row_major(targets, index=None, **_) -> RowMajorLayout:
@@ -231,8 +304,19 @@ def build_list_major(targets, index, prefix_depth: Optional[int] = None,
 
 
 def build_norm_sharded(targets, index, n_shards: int, mesh=None,
-                       axis_name: str = "data", **_) -> ShardedNormLayout:
-    """Deal the norm order round-robin over ``n_shards`` equal slabs."""
+                       axis_name: str = "data",
+                       m_total: Optional[int] = None,
+                       **_) -> ShardedNormLayout:
+    """Deal the norm order round-robin over ``n_shards`` equal slabs.
+
+    ``m_total`` pads the GLOBAL item count before dealing (the engine
+    layer passes the M-bucket, DESIGN.md §10): slabs are sized
+    ``ceil(m_total / n_shards)`` and the extra rows are the standard
+    slab padding (zero rows, norm 0, id ``-1``) the sharded scan already
+    masks — so every snapshot of a bucket produces identically shaped
+    slab arrays and the sharded executor's compile key is
+    bucket-granular, not M-granular.
+    """
     T_np = np.asarray(targets, np.float32)
     M, R = T_np.shape
     if index is not None:
@@ -242,7 +326,7 @@ def build_norm_sharded(targets, index, n_shards: int, mesh=None,
         n = np.linalg.norm(T_np, axis=1)
         order = np.argsort(-n, kind="stable").astype(np.int32)
         norms = n[order]
-    m_local = -(-M // n_shards)
+    m_local = -(-max(M, m_total or M) // n_shards)
     T_sh = np.zeros((n_shards * m_local, R), np.float32)
     norms_sh = np.zeros((n_shards * m_local,), np.float32)
     ids_sh = np.full((n_shards * m_local,), -1, np.int32)

@@ -42,17 +42,24 @@ LSM-style answer:
   result is exact by construction at any mutation rate.
 * **Compaction** — when the delta fills (or tombstones cross a
   fraction of the base) the live rows of base + delta are folded into a
-  FRESH snapshot (new index, new layouts, optionally re-warmed) under a
-  monotonically increasing ``version``. The build can run on a
+  FRESH snapshot (new index, new layouts, readied before the swap)
+  under a monotonically increasing ``version``. The build can run on a
   background thread (``compact_async=True``): queries keep serving the
   old snapshot + a frozen delta + a fresh active delta until the swap,
   and deletes that land during the build are re-applied to the new
   snapshot at swap time (``pending dead``), so no mutation is ever
-  lost. In-flight jitted calls hold references to the old snapshot's
-  pytrees (they stay valid until released), and the compile caches are
-  keyed per snapshot version (``EngineContext.version`` + this module's
-  tail cache), so an executable compiled against snapshot v can never
-  be fed snapshot v+1's arrays.
+  lost. Compaction is COMPILE-FREE under the argument-passing engine
+  contract (DESIGN.md §10): engines take the snapshot state — layout
+  pytrees, index arrays, the catalogue itself, padded to a power-of-two
+  M-bucket — as runtime ARGUMENTS of module-level executors whose
+  compile keys carry no snapshot identity, so the new snapshot
+  re-dispatches every existing trace (``stats.engine_compiles_total``
+  records the traces a build into a never-warmed bucket pays, off the
+  query path). In-flight calls hold references to the old snapshot's
+  pytrees, which stay valid until released; the one closure-compiled
+  engine left (``pallas``) still keys its per-context cache by
+  ``EngineContext.version``, so even there an executable traced against
+  snapshot v can never be fed snapshot v+1's arrays.
 
 Per-query accounting extends the paper's cost metric to the delta:
 ``n_scored`` adds the number of LIVE delta slots scored (the dense
@@ -64,6 +71,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -148,7 +156,23 @@ class QueryInfo:
 
 @dataclasses.dataclass
 class SegmentStats:
-    """Cumulative mutation/compaction counters (monotonic)."""
+    """Cumulative mutation/compaction counters (monotonic).
+
+    ``engine_compiles_total`` counts the ENGINE traces a compaction
+    build needed to make its new snapshot serveable at the warmed
+    shapes (attributed from the new context's own ``trace_counts`` —
+    traces a concurrent serving thread causes are never charged here).
+    Under the argument-passing contract (DESIGN.md §10) a compaction
+    into a warmed M-bucket contributes 0 — the acceptance criterion the
+    streaming bench asserts; a build into a bucket nobody warmed pays
+    its compiles here, on the build (background in ``compact_async``
+    mode), never on the query hot path. ``headroom_compiles_total``
+    separately counts the traces each build invests in the NEXT
+    M-bucket (renewing the server's boot headroom so the guarantee is
+    standing) — future capacity, not a cost of serving this snapshot.
+    ``compaction_s_total``/``last_compaction_s`` time the whole build
+    (live-row fold + index + layouts + readiness + swap).
+    """
 
     n_inserts: int = 0
     n_deletes: int = 0
@@ -156,6 +180,10 @@ class SegmentStats:
     n_compactions: int = 0
     n_failed_compactions: int = 0
     max_delta_occupancy: int = 0
+    engine_compiles_total: int = 0
+    headroom_compiles_total: int = 0
+    compaction_s_total: float = 0.0
+    last_compaction_s: float = 0.0
 
 
 class Snapshot:
@@ -375,6 +403,9 @@ class SegmentedCatalogue:
         self.stats = SegmentStats()
         self.last_build_error: Optional[BaseException] = None
         self._warm_spec: Optional[tuple] = None
+        # highest M-bucket any warmup has traced (DESIGN.md §10): the
+        # headroom-renewal memo, so the pre-pay happens once per doubling
+        self._headroom_bucket = 0
 
     # -- introspection -------------------------------------------------------
 
@@ -597,6 +628,9 @@ class SegmentedCatalogue:
 
         def build():
             ok = False
+            t_build = time.perf_counter()
+            own_compiles = 0
+            headroom_compiles = 0
             try:
                 ctx = EngineContext(new_rows, version=version,
                                     **self._ctx_kwargs)
@@ -605,18 +639,63 @@ class SegmentedCatalogue:
                 if new_gids[0] < 0:
                     new_snap.kill_rows([0])   # the guard row is dead
                 if self._warm_spec is not None:
-                    # pre-warm the new snapshot's ENGINES before the swap
-                    # (at the serving k and the escalated shape), so
-                    # rebuild + compile stay entirely off the query hot
-                    # path. The segmented tails need no re-warm: their
-                    # compiles are snapshot-version-free, already cached.
-                    k, sizes, engines = self._warm_spec
+                    # Readiness pass over the new snapshot BEFORE the swap
+                    # (at the serving k and the escalated shape): builds +
+                    # uploads the padded engine args and runs each warmed
+                    # engine once, so the post-swap first query touches
+                    # only device-resident state. Under the argument-
+                    # passing contract (DESIGN.md §10) this COMPILES
+                    # nothing for a same-bucket compaction — the shared
+                    # executors' traces are bucket-keyed, version-free —
+                    # and only a bucket-crossing build into a never-warmed
+                    # bucket traces (counted in
+                    # ``stats.engine_compiles_total``, off the query hot
+                    # path). The segmented tails need no re-warm either:
+                    # their compiles are batch-shaped, already cached.
+                    # Traces are counted from the NEW context's own
+                    # attributed ``trace_counts`` — a trace a concurrent
+                    # serving thread causes on the OLD snapshot during
+                    # this window is its own, not this build's.
+                    k, sizes, engines, headroom = self._warm_spec
                     ctx.warmup(k, batch_sizes=sizes, engines=engines)
                     kb_esc = min(new_snap.num_rows,
                                  int(k) + self.overfetch_reserve)
                     if engines and kb_esc > min(new_snap.num_rows, int(k)):
                         ctx.warmup(kb_esc, batch_sizes=sizes,
                                    engines=engines)
+                    own_compiles = sum(ctx.trace_counts.values())
+                    nxt = 2 * ctx.m_bucket
+                    if (headroom
+                            and 4 * new_snap.num_rows > 3 * ctx.m_bucket
+                            and nxt > self._headroom_bucket):
+                        # The snapshot fills ≥75% of its bucket and the
+                        # next bucket was never warmed: renew the
+                        # one-doubling headroom the server's boot warmup
+                        # established, so the guarantee is STANDING —
+                        # the crossing this growth is heading for finds
+                        # its traces waiting. Renewing here (not at
+                        # bucket ENTRY) defers the pre-pay until the
+                        # boundary actually threatens, and the
+                        # ``_headroom_bucket`` memo makes it once per
+                        # doubling — steady-state builds never rebuild
+                        # oversized args. Accounted separately: an
+                        # investment for the next crossing, not a cost
+                        # of serving this snapshot. (If delta_capacity
+                        # exceeds a quarter-bucket, one compaction can
+                        # leap the 75% band and the crossing build pays
+                        # its own compiles — recorded, off the query
+                        # path.)
+                        ctx.warmup(k, batch_sizes=sizes, engines=engines,
+                                   m_buckets=(nxt,))
+                        if engines and kb_esc > min(new_snap.num_rows,
+                                                    int(k)):
+                            ctx.warmup(kb_esc, batch_sizes=sizes,
+                                       engines=engines, m_buckets=(nxt,))
+                        headroom_compiles = (
+                            sum(ctx.trace_counts.values()) - own_compiles)
+                        with self._lock:
+                            self._headroom_bucket = max(
+                                self._headroom_bucket, nxt)
                 with self._lock:
                     pend = [new_snap.gid_to_row[g]
                             for g in self._pending_dead
@@ -628,6 +707,11 @@ class SegmentedCatalogue:
                     self._frozen = [s for s in self._frozen
                                     if s not in folding]
                     self.stats.n_compactions += 1
+                    dt = time.perf_counter() - t_build
+                    self.stats.last_compaction_s = dt
+                    self.stats.compaction_s_total += dt
+                    self.stats.engine_compiles_total += own_compiles
+                    self.stats.headroom_compiles_total += headroom_compiles
             except Exception as exc:
                 # the sealed segments stay in self._frozen: still
                 # queryable, re-folded by the next compaction — a failed
@@ -816,7 +900,7 @@ class SegmentedCatalogue:
 
     def warm(self, k: int, batch_sizes=(1, 64),
              snap: Optional[Snapshot] = None,
-             engines=None) -> "SegmentedCatalogue":
+             engines=None, m_buckets=None) -> "SegmentedCatalogue":
         """Compile the segmented tail for every delta-capacity bucket.
 
         Tails are warmed at BOTH base-fetch shapes — plain ``k`` (the
@@ -827,12 +911,15 @@ class SegmentedCatalogue:
         executable — 0 new traces (asserted in tests via
         :attr:`trace_counts`); deletes are likewise retrace-free when
         ``engines`` is given, which additionally pre-compiles those
-        engines at the over-fetched shape. ``snap`` warms a
-        not-yet-swapped-in snapshot (the background compaction pre-warm
-        path). Tail compiles are snapshot-version-free (their inputs
-        are batch-shaped), so a compaction re-warms only the base
-        ENGINES for the new snapshot — the tails compiled here serve
-        every future snapshot as is.
+        engines at the over-fetched shape — over every M-bucket in
+        ``m_buckets`` (DESIGN.md §10), so a compaction that crosses into
+        a warmed bucket stays compile-free on the tombstoned path too.
+        ``snap`` warms a not-yet-swapped-in snapshot (the background
+        compaction readiness path). Tail compiles are snapshot-free
+        twice over (batch-shaped inputs AND, since the argument-passing
+        refactor, version-free engine executors), so a compaction
+        re-runs only the readiness pass for the new snapshot — the
+        tails compiled here serve every future snapshot as is.
         """
         snap = self._snapshot if snap is None else snap
         kb = min(snap.num_rows, int(k))
@@ -871,11 +958,28 @@ class SegmentedCatalogue:
                         fn(bv, tomb, bg, U, (frozen, dummy_seg(d))))
         if engines and kb_esc > kb:
             snap.ctx.warmup(kb_esc, batch_sizes=batch_sizes,
-                            engines=engines)
+                            engines=engines, m_buckets=m_buckets)
+        if m_buckets:
+            with self._lock:
+                self._headroom_bucket = max(
+                    self._headroom_bucket,
+                    *(int(b) for b in m_buckets))
         return self
 
-    def set_warm_spec(self, k: int, batch_sizes, engines=None) -> None:
-        """Remember what to pre-warm on each compacted snapshot, so the
+    def set_warm_spec(self, k: int, batch_sizes, engines=None,
+                      headroom: bool = True) -> None:
+        """Remember what to ready on each compacted snapshot, so the
         post-swap first query hits compiled executables (the rebuild cost
-        stays off the query hot path, including compiles)."""
-        self._warm_spec = (int(k), tuple(batch_sizes), engines)
+        stays off the query hot path, including compiles).
+
+        ``headroom=True`` additionally has a build whose snapshot fills
+        ≥75% of its M-bucket pre-trace the NEXT bucket, once per
+        doubling (DESIGN.md §10) — renewing the boot warmup's
+        one-doubling headroom just before growth needs it, so that
+        EVERY future bucket crossing, not just the first, compacts
+        compile-free; the investment is counted in
+        ``SegmentStats.headroom_compiles_total``, never in
+        ``engine_compiles_total``.
+        """
+        self._warm_spec = (int(k), tuple(batch_sizes), engines,
+                           bool(headroom))

@@ -309,6 +309,20 @@ def sharded_norm_topk(mesh, axis_names: Sequence[str]):
             blk = min(block_size, m_local)
             n_steps = -(-m_local // blk)
             cap = n_steps if max_blocks < 0 else min(max_blocks, n_steps)
+            # pad rows (id -1: slab equalisation and the engine layer's
+            # M-bucket padding, DESIGN.md §10) are a slab SUFFIX — cap
+            # the loop at the real rows so a worst-case (never-certified)
+            # query still stops where the unpadded scan would
+            n_real_l = jnp.sum((ids_l >= 0).astype(jnp.int32))
+            cap_rt = jnp.minimum(jnp.int32(cap), -(-n_real_l // blk))
+            # the loop body contains collectives, so every shard must
+            # enter it the same number of times: the INITIAL active flag
+            # is pmax-combined (an all-padding shard — M_real < n_shards
+            # — iterates with live all-False instead of skipping a loop
+            # its peers are running collectives inside)
+            active0 = cap_rt > 0
+            for a in axis_names:
+                active0 = jax.lax.pmax(active0, a)
             u_norms = jnp.linalg.norm(U_rep, axis=1)          # [B]
             next_starts = jnp.minimum(
                 (jnp.arange(n_steps, dtype=jnp.int32) + 1) * blk,
@@ -322,7 +336,11 @@ def sharded_norm_topk(mesh, axis_names: Sequence[str]):
 
             def body(s):
                 step, tv, ti, ns, dp, lower, upper, _ = s
-                live = lower < upper                          # [B]
+                # per-query liveness, gated on THIS shard's real-row cap:
+                # the collective lockstep loop keeps running while any
+                # shard is active, and a capped-out shard must not keep
+                # accumulating depth over its pad suffix
+                live = jnp.logical_and(lower < upper, step < cap_rt)  # [B]
                 d0 = step * blk
                 start = jnp.maximum(0, jnp.minimum(d0, m_local - blk))
                 tile = jax.lax.dynamic_slice_in_dim(T_l, start, blk)
@@ -348,7 +366,7 @@ def sharded_norm_topk(mesh, axis_names: Sequence[str]):
                 for a in axis_names:
                     glob = jax.lax.pmax(glob, a)
                 lower = jnp.maximum(lower, glob)
-                shard_active = jnp.logical_and(step + 1 < cap,
+                shard_active = jnp.logical_and(step + 1 < cap_rt,
                                                jnp.any(lower < upper))
                 any_active = shard_active
                 for a in axis_names:
@@ -362,7 +380,7 @@ def sharded_norm_topk(mesh, axis_names: Sequence[str]):
                      jnp.zeros((B,), jnp.int32),
                      jnp.full((B,), NEG_INF, T_l.dtype),
                      jnp.full((B,), jnp.inf, T_l.dtype),
-                     jnp.asarray(cap > 0))
+                     active0)
             _, tv, ti, ns, dp, _, _, _ = jax.lax.while_loop(cond, body,
                                                             state)
             # local rows -> GLOBAL catalogue ids, then the P*K merge

@@ -25,6 +25,18 @@ query and returns a :class:`repro.core.driver.ScanStrategy` for
 The list strategies leave ``ScanStrategy.score`` as the default dense
 gather + matvec unless a layout or an explicit ``score_fn`` (e.g. the
 Pallas gather-fused kernel) supplies a cheaper path.
+
+**Pad-aware index arithmetic** (DESIGN.md §10): every strategy accepts an
+optional ``m_real`` — a TRACED scalar carrying the real catalogue size
+when the index/layout arrays have been padded to an M-bucket (so one
+compiled executable serves every snapshot of the bucket). All walk
+positions, direction flips (``m - 1 - d``), Eq. 3 bound lookups,
+freshness keys, and the dynamic step/round caps the driver consumes
+(`ScanStrategy.num_steps_dynamic` / ``num_rounds_dynamic``) are computed
+against ``m_real``, never against the padded array length — pad rows are
+therefore never enumerated, never scored, and never counted, and results
+are bit-identical to the unpadded scan. ``m_real=None`` (the default)
+keeps the static-shape behaviour.
 """
 
 from __future__ import annotations
@@ -64,15 +76,18 @@ def _keys_from_ranks(ranks: Array, u: Array, m: int) -> Array:
     return jnp.min(keys, axis=-1)                                # [...]
 
 
-def _first_occurrence_keys(rank_desc: Array, u: Array) -> Array:
+def _first_occurrence_keys(rank_desc: Array, u: Array,
+                           m_real=None) -> Array:
     """Per-item keys for the whole catalogue (O(R*M) per-query precompute,
-    the non-layout gather path's freshness table)."""
+    the non-layout gather path's freshness table). ``m_real`` is the real
+    (unpadded) catalogue size when the rank array is M-bucket padded."""
     R, M = rank_desc.shape
-    return _keys_from_ranks(rank_desc.T, u, M)                   # [M]
+    m = M if m_real is None else m_real
+    return _keys_from_ranks(rank_desc.T, u, m)                   # [M]
 
 
 def rank_gather_first_keys(rank_by_item: Array, u: Array,
-                           ids: Array) -> Array:
+                           ids: Array, m_real=None) -> Array:
     """Keys for ONE block of candidates, by row gather.
 
     Computed only for the ``C`` candidates at hand from the transposed
@@ -80,14 +95,17 @@ def rank_gather_first_keys(rank_by_item: Array, u: Array,
     (:attr:`repro.core.layout.ListMajorLayout.rank_by_item`, ``[M, R]``):
     a ``[C, R]`` int gather per block instead of an O(R*M) per-query
     precompute. Used by the post-prefix tail of the layout path, where
-    blocks are rare (DESIGN.md §7).
+    blocks are rare (DESIGN.md §7). ``m_real`` is the real catalogue
+    size when ``rank_by_item`` is M-bucket padded.
     """
     M, R = rank_by_item.shape
-    return _keys_from_ranks(rank_by_item[ids], u, M)             # [C]
+    m = M if m_real is None else m_real
+    return _keys_from_ranks(rank_by_item[ids], u, m)             # [C]
 
 
 def ta_round_strategy(order_desc: Array, t_sorted_desc: Array, u: Array,
-                      rank_desc: Optional[Array] = None) -> ScanStrategy:
+                      rank_desc: Optional[Array] = None,
+                      m_real=None) -> ScanStrategy:
     """Paper-faithful TA rounds with gather-side direction resolution.
 
     Args:
@@ -103,26 +121,29 @@ def ta_round_strategy(order_desc: Array, t_sorted_desc: Array, u: Array,
         freshness runs on cursor arithmetic (same round-major key as the
         blocked strategy) and the driver drops the O(M) visited bitmap
         from the loop carry — identical results and counts.
+      m_real: optional traced real catalogue size (arrays M-bucket
+        padded); walks, bounds, and the dynamic round cap use it.
     """
     R, M = order_desc.shape
+    m = M if m_real is None else m_real
     neg = u < 0
     active = u != 0  # sparse queries: zero-weight lists are never walked
     rows_r = jnp.arange(R, dtype=jnp.int32)
 
     def candidates(step):
-        cols = jnp.where(neg, M - 1 - step, step)
+        cols = jnp.where(neg, m - 1 - step, step)
         ids = order_desc[rows_r, cols]
         return ids, active
 
     def bound(step):
         # Eq. 3 at the depth just consumed
-        cols = jnp.where(neg, M - 1 - step, step)
+        cols = jnp.where(neg, m - 1 - step, step)
         t_at = t_sorted_desc[rows_r, cols]
         return jnp.sum(u * t_at)
 
     fresh_mask = None
     if rank_desc is not None:
-        first_key = _first_occurrence_keys(rank_desc, u)
+        first_key = _first_occurrence_keys(rank_desc, u, m_real)
         slot_r = jnp.arange(R, dtype=jnp.int32)
 
         def fresh_mask(step, ids, active_slots):
@@ -130,7 +151,8 @@ def ta_round_strategy(order_desc: Array, t_sorted_desc: Array, u: Array,
                                    first_key[ids] == step * R + slot_r)
 
     return ScanStrategy(candidates=candidates, bound=bound, num_steps=M,
-                        track_visited=True, fresh_mask=fresh_mask)
+                        track_visited=True, fresh_mask=fresh_mask,
+                        num_steps_dynamic=m_real)
 
 
 def blocked_lists_strategy(
@@ -142,6 +164,7 @@ def blocked_lists_strategy(
     ta_rounds: bool = False,
     rank_by_item: Optional[Array] = None,
     score_fn: Optional[Callable[[Array], Array]] = None,
+    m_real=None,
 ) -> ScanStrategy:
     """BTA enumeration: ``R * block_size`` candidates per step.
 
@@ -172,8 +195,13 @@ def blocked_lists_strategy(
         precedence over ``rank_desc``.
       score_fn: optional ``ids -> scores`` override (e.g. the Pallas
         gather-fused scorer) replacing the default ``targets[ids] @ u``.
+      m_real: optional traced real catalogue size (arrays M-bucket
+        padded). Clamps, direction flips, bound lookups, freshness keys,
+        and the dynamic step/round caps all use it, so pad entries past
+        the real list ends are never walked.
     """
     R, M = order_desc.shape
+    m = M if m_real is None else m_real
     neg = u < 0
     active = u != 0
     active_rep = jnp.repeat(active, block_size,
@@ -182,8 +210,8 @@ def blocked_lists_strategy(
 
     def candidates(step):
         d0 = step * block_size
-        cols = jnp.minimum(d0 + offs, M - 1)
-        cols_eff = jnp.where(neg[:, None], M - 1 - cols[None, :],
+        cols = jnp.minimum(d0 + offs, m - 1)
+        cols_eff = jnp.where(neg[:, None], m - 1 - cols[None, :],
                              cols[None, :])
         ids = jnp.take_along_axis(order_desc, cols_eff, axis=1).reshape(-1)
         return ids, active_rep
@@ -191,16 +219,16 @@ def blocked_lists_strategy(
     def block_bound(step):
         # bound at the block's last processed depth — valid for every unseen
         # item because the lists are monotone (Eq. 3 holds at any depth)
-        end = jnp.minimum(step * block_size + block_size - 1, M - 1)
-        end_eff = jnp.where(neg, M - 1 - end, end)
+        end = jnp.minimum(step * block_size + block_size - 1, m - 1)
+        end_eff = jnp.where(neg, m - 1 - end, end)
         t_end = t_sorted_desc[jnp.arange(R), end_eff]
         return jnp.sum(u * t_end)
 
     def round_bounds(step):
         # Eq. 3 at EVERY depth of the block — the chunked-TA driver stops
         # mid-block at exactly the sequential algorithm's round
-        d = jnp.minimum(step * block_size + offs, M - 1)            # [B]
-        d_eff = jnp.where(neg[:, None], M - 1 - d[None, :], d[None, :])
+        d = jnp.minimum(step * block_size + offs, m - 1)            # [B]
+        d_eff = jnp.where(neg[:, None], m - 1 - d[None, :], d[None, :])
         t_at = jnp.take_along_axis(t_sorted_desc, d_eff, axis=1)    # [R, B]
         return jnp.sum(u[:, None] * t_at, axis=0)                   # [B]
 
@@ -216,26 +244,27 @@ def blocked_lists_strategy(
         slot_depth = jnp.tile(offs, R)                               # [R*B]
         if rank_by_item is not None:
             def fresh_mask(step, ids, active_slots):
-                fk = rank_gather_first_keys(rank_by_item, u, ids)
+                fk = rank_gather_first_keys(rank_by_item, u, ids, m_real)
                 d = step * block_size + slot_depth  # unclamped true depth
                 sk = d * R + slot_r
                 return jnp.logical_and(
-                    jnp.logical_and(active_slots, fk == sk), d < M)
+                    jnp.logical_and(active_slots, fk == sk), d < m)
         else:
-            first_key = _first_occurrence_keys(rank_desc, u)
+            first_key = _first_occurrence_keys(rank_desc, u, m_real)
 
             def fresh_mask(step, ids, active_slots):
                 d = step * block_size + slot_depth  # unclamped true depth
                 sk = d * R + slot_r
                 return jnp.logical_and(
                     jnp.logical_and(active_slots, first_key[ids] == sk),
-                    d < M)
+                    d < m)
 
     score = None
     if score_fn is not None:
         def score(step, ids, active_slots):
             return score_fn(ids)
 
+    steps_dyn = None if m_real is None else -(-m_real // block_size)
     if ta_rounds and block_size > 1:
         # block_size == 1 falls through: one round per step IS the plain
         # blocked strategy, and the driver's scalar-bound path handles it.
@@ -246,11 +275,14 @@ def blocked_lists_strategy(
                             num_steps=-(-M // block_size),
                             track_visited=False, fresh_mask=fresh_mask,
                             score=score,
-                            rounds_per_step=block_size, num_rounds=M)
+                            rounds_per_step=block_size, num_rounds=M,
+                            num_steps_dynamic=steps_dyn,
+                            num_rounds_dynamic=m_real)
     return ScanStrategy(candidates=candidates, bound=block_bound,
                         num_steps=-(-M // block_size),
                         track_visited=fresh_mask is None,
-                        fresh_mask=fresh_mask, score=score)
+                        fresh_mask=fresh_mask, score=score,
+                        num_steps_dynamic=steps_dyn)
 
 
 def list_prefix_strategy(
@@ -259,6 +291,7 @@ def list_prefix_strategy(
     u: Array,
     block_size: int,
     ta_rounds: bool = False,
+    m_real=None,
 ) -> ScanStrategy:
     """Gather-free TA/BTA enumeration over the contiguous list prefix.
 
@@ -289,9 +322,16 @@ def list_prefix_strategy(
       t_sorted_desc: ``[R, M]`` sorted values (bounds only).
       ta_rounds: chunked-TA mode, as in :func:`blocked_lists_strategy`
         (``num_rounds`` is capped at the prefix depth).
+      m_real: optional traced real catalogue size when the layout's
+        ``rank_by_item`` / the index arrays are M-bucket padded. The
+        prefix TILES themselves are never padded (their shape is set by
+        ``prefix_depth``, which is ≤ the real size by construction), so
+        only the freshness keys and direction-flip bound lookups need
+        the real size.
     """
     R, P = layout.head_ids.shape
     M = layout.rank_by_item.shape[0]
+    m = M if m_real is None else m_real
     neg = u < 0
     active = u != 0
     n_steps = layout.prefix_steps(block_size)
@@ -325,21 +365,21 @@ def list_prefix_strategy(
 
     def fresh_mask(step, ids, active_slots):
         ranks = _dir_slice(layout.head_ranks, layout.tail_ranks, step)
-        fk = _keys_from_ranks(ranks, u, M)                      # [R, B]
+        fk = _keys_from_ranks(ranks, u, m)                      # [R, B]
         d0 = step * block_size
         return jnp.logical_and(active[:, None],
                                fk == d0 * R + slot_key).reshape(-1)
 
     def block_bound(step):
-        # prefix steps never clamp: d0 + B - 1 < P <= M
+        # prefix steps never clamp: d0 + B - 1 < P <= m
         end = step * block_size + block_size - 1
-        end_eff = jnp.where(neg, M - 1 - end, end)
+        end_eff = jnp.where(neg, m - 1 - end, end)
         t_end = t_sorted_desc[jnp.arange(R), end_eff]
         return jnp.sum(u * t_end)
 
     def round_bounds(step):
         d = step * block_size + offs                                # [B]
-        d_eff = jnp.where(neg[:, None], M - 1 - d[None, :], d[None, :])
+        d_eff = jnp.where(neg[:, None], m - 1 - d[None, :], d[None, :])
         t_at = jnp.take_along_axis(t_sorted_desc, d_eff, axis=1)    # [R, B]
         return jnp.sum(u[:, None] * t_at, axis=0)                   # [B]
 
@@ -360,6 +400,7 @@ def norm_block_strategy(
     u: Array,
     block_size: int,
     targets_by_norm: Optional[Array] = None,
+    m_real=None,
 ) -> ScanStrategy:
     """Decreasing-norm contiguous blocks with Cauchy-Schwarz bounds.
 
@@ -378,8 +419,15 @@ def norm_block_strategy(
     precomputed vector indexed per step. The tail block slides back to
     stay in bounds; rows re-entering from the previous block are masked
     inactive, so counts are unchanged.
+
+    ``m_real`` (traced) is the real catalogue size when the norm arrays
+    are M-bucket padded (pad rows zero, norm 0, id -1 — sorted last by
+    construction): the tail block then slides back against the REAL end,
+    pad rows are masked out of scoring and counting, and the dynamic
+    step cap stops the scan where the unpadded scan would.
     """
     M = norm_order.shape[0]
+    m = M if m_real is None else m_real
     u_norm = jnp.linalg.norm(u)
     offs = jnp.arange(block_size, dtype=jnp.int32)
     use_slices = targets_by_norm is not None and M >= block_size
@@ -387,25 +435,26 @@ def norm_block_strategy(
     # bound after step b = ||u|| * norm of the first unseen row; one
     # vectorised precompute, one dynamic index per step
     next_starts = jnp.minimum(
-        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, M - 1)
+        (jnp.arange(n_steps, dtype=jnp.int32) + 1) * block_size, m - 1)
     block_bounds = u_norm * norms_sorted[next_starts]
 
     def candidates(step):
         d0 = step * block_size
         if use_slices:
-            start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+            start = jnp.maximum(0, jnp.minimum(d0, m - block_size))
             rows = start + offs
-            valid = rows >= d0      # mask rows the previous block scored
+            # mask rows the previous block scored, and pad rows
+            valid = jnp.logical_and(rows >= d0, rows < m)
             return rows, valid     # local rows; caller remaps after scan
-        rows = jnp.minimum(d0 + offs, M - 1)
-        valid = (d0 + offs) < M
+        rows = jnp.minimum(d0 + offs, m - 1)
+        valid = (d0 + offs) < m
         return norm_order[rows], valid
 
     score = None
     if use_slices:
         def score(step, ids, active):
             d0 = step * block_size
-            start = jnp.maximum(0, jnp.minimum(d0, M - block_size))
+            start = jnp.maximum(0, jnp.minimum(d0, m - block_size))
             tile = jax.lax.dynamic_slice_in_dim(targets_by_norm, start,
                                                 block_size)
             return tile @ u
@@ -415,4 +464,7 @@ def norm_block_strategy(
 
     return ScanStrategy(candidates=candidates, bound=bound,
                         num_steps=n_steps, track_visited=False,
-                        score=score)
+                        score=score,
+                        num_steps_dynamic=(
+                            None if m_real is None
+                            else -(-m_real // block_size)))

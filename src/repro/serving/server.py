@@ -141,21 +141,42 @@ class TopKServer:
         """Registry names accepted by :meth:`query`'s ``method=``."""
         return engine_names()
 
-    def warmup(self, k: int, batch_sizes=None, engines=None) -> "TopKServer":
+    def warmup(self, k: int, batch_sizes=None, engines=None,
+               m_buckets=None) -> "TopKServer":
         """Populate the per-engine compiled-executable cache ahead of
-        traffic (DESIGN.md §6). After warmup, same-shape queries hit the
-        cache with zero new traces (``self.ctx.trace_counts`` proves it).
+        traffic (DESIGN.md §6/§10). After warmup, same-shape queries hit
+        the cache with zero new traces (``self.ctx.trace_counts`` proves
+        it).
+
+        **Warmup over M-buckets** (DESIGN.md §10): argument-passing
+        executors are traced per CATALOGUE bucket, so this also warms
+        ``m_buckets`` — by default the current bucket plus the next one
+        (one doubling of headroom). A streaming catalogue that grows
+        across its next power-of-two boundary then compacts with ZERO
+        engine retraces, exactly like a same-bucket compaction; pass
+        more buckets for more growth headroom, or ``(ctx.m_bucket,)``
+        to warm only the current size.
 
         Also warms the streaming layer: the segmented tail is compiled
         for EVERY delta-capacity bucket (DESIGN.md §9), so the first
         query after any insert dispatches cached executables — 0 new
-        traces — and records the warm spec so compaction pre-warms each
-        replacement snapshot before swapping it in.
+        traces — and records the warm spec so compaction readies each
+        replacement snapshot before swapping it in (compile-free for
+        warmed buckets).
         """
         sizes = tuple(batch_sizes) if batch_sizes else (1, self.max_batch)
-        self.ctx.warmup(k, batch_sizes=sizes, engines=engines)
-        self.catalogue.warm(k, batch_sizes=sizes, engines=engines)
-        self.catalogue.set_warm_spec(k, sizes, engines)
+        if m_buckets is None:
+            mb = self.ctx.m_bucket
+            m_buckets = (mb, 2 * mb)
+        self.ctx.warmup(k, batch_sizes=sizes, engines=engines,
+                        m_buckets=m_buckets)
+        self.catalogue.warm(k, batch_sizes=sizes, engines=engines,
+                            m_buckets=m_buckets)
+        # compactions renew the headroom iff the boot warmup established
+        # any (each build then pre-traces ITS next bucket, keeping every
+        # future crossing compile-free, not just the first)
+        headroom = any(int(b) > self.ctx.m_bucket for b in m_buckets)
+        self.catalogue.set_warm_spec(k, sizes, engines, headroom=headroom)
         return self
 
     # -- streaming mutations (DESIGN.md §9) ---------------------------------
@@ -187,6 +208,16 @@ class TopKServer:
             "n_tombstones": cat.n_tombstones,
             "snapshot_version": cat.version,
             "num_live": cat.num_live,
+            # argument-passing contract (DESIGN.md §10): engine traces
+            # observed during compaction builds — 0 for compactions whose
+            # M-bucket was warmed — and the builds' wall-clock
+            "engine_compiles_total": cat.stats.engine_compiles_total,
+            "engine_compiles_per_compaction": (
+                cat.stats.engine_compiles_total
+                / max(cat.stats.n_compactions, 1)),
+            "headroom_compiles_total": cat.stats.headroom_compiles_total,
+            "compaction_s_total": cat.stats.compaction_s_total,
+            "last_compaction_s": cat.stats.last_compaction_s,
         }
 
     def _record(self, method: str, res, dt: float, n: int,

@@ -278,23 +278,36 @@ def test_chunked_ta_halted_budget_is_round_granular():
 
 def test_repeated_same_shape_calls_do_not_retrace():
     rng = np.random.default_rng(53)
-    T = rng.standard_normal((600, 16)).astype(np.float32)
+    # shapes unique to this test (R=21, k=6): under the MODULE-LEVEL
+    # argument-passing executors (DESIGN.md §10) the trace cache is
+    # process-wide, so a signature another test already compiled would
+    # legitimately attribute 0 traces to this context
+    T = rng.standard_normal((600, 21)).astype(np.float32)
     ctx = EngineContext(T, block_size=64)
-    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    U = jnp.asarray(rng.standard_normal((4, 21)).astype(np.float32))
     # host-only oracles never trace; dispatch engines have no executable
-    engines = [e for e in list_engines() if e.make_batched is not None]
+    engines = [e for e in list_engines() if e.has_executable]
     for eng in engines:
-        eng.run(ctx, U, 5)                   # populates the cache
+        eng.run(ctx, U, 6)                   # populates the cache
     warm = dict(ctx.trace_counts)
     assert all(warm.get(e.name, 0) >= 1 for e in engines)
     for _ in range(3):
         for eng in engines:
-            eng.run(ctx, U, 5)
+            eng.run(ctx, U, 6)
     assert ctx.trace_counts == warm          # 0 new traces after warmup
-    # a second norm call specifically must not rebuild its vmap closure
+    # a second norm call specifically must not rebuild its executable
     before = ctx.trace_counts["norm"]
-    get_engine("norm").run(ctx, U, 5)
+    get_engine("norm").run(ctx, U, 6)
     assert ctx.trace_counts["norm"] == before
+    # and a SECOND context of the same M-bucket shares every trace: the
+    # argument-passing engines attribute nothing to it (pallas, the one
+    # closure engine, still compiles per context)
+    ctx2 = EngineContext(
+        rng.standard_normal((555, 21)).astype(np.float32), block_size=64)
+    for eng in engines:
+        if eng.run_args is not None:
+            eng.run(ctx2, U, 6)
+    assert ctx2.trace_counts == {}
 
 
 def test_batch_bucketing_pads_and_slices():
