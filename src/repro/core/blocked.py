@@ -42,11 +42,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import (merge_block_into_carry_batched,
+from repro.core.driver import (ScanState, batched_pruned_scan,
+                               merge_block_into_carry_batched,
                                pruned_block_scan)
 from repro.core.index import TopKIndex
 from repro.core.naive import TopKResult
 from repro.core.strategies import (
+    batched_list_prefix_strategy,
     blocked_lists_strategy,
     list_prefix_strategy,
     norm_block_strategy,
@@ -97,6 +99,93 @@ def _two_phase_list_scan(targets, order_desc, t_sorted_desc, u, k,
                                   score_fn=tail_score_fn, m_real=m_real)
     return pruned_block_scan(targets, u, tail, k, max_steps=max_blocks,
                              max_rounds=max_rounds, init_state=state)
+
+
+def _batched_two_phase_list_scan(targets, order_desc, t_sorted_desc, U, k,
+                                 block_size, max_blocks, max_rounds, layout,
+                                 ta_rounds, sign, dense, tail_pallas=False,
+                                 m_real=None):
+    """Batch-native prefix phase chained into a vmapped gather tail.
+
+    Phase 1 is :func:`repro.core.driver.batched_pruned_scan` over
+    :func:`repro.core.strategies.batched_list_prefix_strategy` — ONE
+    shared tile enumeration per step for the whole batch, per-query
+    liveness/freshness keeping every counter sequential-faithful
+    (DESIGN.md §11). The final :class:`BatchedScanState` is split into
+    per-lane :class:`ScanState` s (each lane's ABSOLUTE block cursor is
+    its gated ``steps`` counter) seeding the same vmapped gather-side
+    tail the per-query path uses; a batch whose every query certified
+    inside the prefix — virtually all of them — executes ZERO tail
+    iterations, and a prefix-overflowing lane resumes exactly where its
+    sequential scan would.
+    """
+    prefix = batched_list_prefix_strategy(
+        layout, t_sorted_desc, U, block_size, sign=sign, dense=dense,
+        ta_rounds=ta_rounds, m_real=m_real)
+    _, bstate = batched_pruned_scan(
+        U, prefix, k, targets.dtype, max_steps=max_blocks,
+        max_rounds=max_rounds, return_state=True)
+    B = U.shape[0]
+    states = ScanState(
+        step=bstate.steps,                       # [B] absolute block cursor
+        top_vals=bstate.top_vals, top_ids=bstate.top_ids,
+        visited=jnp.zeros((B, 1), bool),         # tail is fresh_mask-based
+        n_scored=bstate.n_scored, rounds=bstate.rounds,
+        lower=bstate.lower, upper=bstate.upper)
+
+    def tail_one(u, st):
+        tail = blocked_lists_strategy(
+            order_desc, t_sorted_desc, u, block_size,
+            rank_by_item=layout.rank_by_item, ta_rounds=ta_rounds,
+            score_fn=_pallas_tail_scorer(targets, u) if tail_pallas
+            else None, m_real=m_real)
+        return pruned_block_scan(targets, u, tail, k, max_steps=max_blocks,
+                                 max_rounds=max_rounds, init_state=st)
+
+    return jax.vmap(tail_one)(U, states)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_size", "max_blocks", "sign",
+                                    "dense", "tail_pallas"))
+def blocked_topk_batched_native(
+    targets: Array,
+    order_desc: Array,
+    t_sorted_desc: Array,
+    U: Array,
+    k: int,
+    block_size: int = 256,
+    max_blocks: int = -1,
+    layout=None,
+    sign: int = 0,
+    dense: bool = False,
+    tail_pallas: bool = False,
+    m_real=None,
+) -> TopKResult:
+    """Batch-native BTA over the list-prefix layout (DESIGN.md §11).
+
+    The batched counterpart of ``vmap(blocked_topk)``: one shared prefix
+    tile per step for the whole batch, a single batch-level while_loop
+    whose step count is the max live query's depth, per-query
+    freshness/liveness so results AND ``n_scored``/``depth`` equal the
+    per-query scan's. ``sign``/``dense`` are the batch's STATIC sign
+    bucket (:func:`repro.core.strategies.sign_bucket`); the caller
+    guarantees they match ``U`` and that ``layout`` has the needed
+    side(s). Requires a layout whose prefix covers at least one block.
+    """
+    if layout is None or layout.prefix_steps(block_size) < 1:
+        raise ValueError("blocked_topk_batched_native requires a "
+                         "ListMajorLayout with >= 1 prefix block")
+    if not layout.serves_sign(sign):
+        raise ValueError(
+            f"layout with sides {layout.sides!r} cannot serve sign "
+            f"bucket {sign} (mixed batches need both directions)")
+    k = min(k, targets.shape[0])
+    res = _batched_two_phase_list_scan(
+        targets, order_desc, t_sorted_desc, U, k, block_size, max_blocks,
+        -1, layout, ta_rounds=False, sign=sign, dense=dense,
+        tail_pallas=tail_pallas, m_real=m_real)
+    return res._replace(depth=res.depth * block_size)
 
 
 @functools.partial(jax.jit,
@@ -259,6 +348,52 @@ def chunked_ta_topk_batched(
                                chunk=chunk, max_rounds=max_rounds)
 
     return jax.vmap(one)(U)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chunk", "max_rounds", "sign",
+                                    "dense", "tail_pallas"))
+def chunked_ta_topk_batched_native(
+    targets: Array,
+    order_desc: Array,
+    t_sorted_desc: Array,
+    U: Array,
+    k: int,
+    chunk: int = 32,
+    max_rounds: int = -1,
+    layout=None,
+    sign: int = 0,
+    dense: bool = False,
+    tail_pallas: bool = False,
+    m_real=None,
+) -> TopKResult:
+    """Batch-native chunked TA over the list-prefix layout (DESIGN.md §11).
+
+    The batched counterpart of ``vmap(chunked_ta_topk)``: the shared
+    prefix tiles feed the driver's closed-form sequential-round
+    recovery per lane, so each query's ``n_scored``/``depth`` equal the
+    item-at-a-time paper algorithm's (and
+    :func:`repro.core.threshold.threshold_topk_np`'s) exactly, while the
+    whole batch shares one enumeration loop. ``sign``/``dense`` are the
+    batch's static sign bucket, as in
+    :func:`blocked_topk_batched_native`.
+    """
+    if layout is None or layout.prefix_steps(chunk) < 1:
+        raise ValueError("chunked_ta_topk_batched_native requires a "
+                         "ListMajorLayout with >= 1 prefix block")
+    if not layout.serves_sign(sign):
+        raise ValueError(
+            f"layout with sides {layout.sides!r} cannot serve sign "
+            f"bucket {sign} (mixed batches need both directions)")
+    k = min(k, targets.shape[0])
+    # chunk=1 degenerates to plain blocked steps (depth unit = rounds
+    # either way); the halted budget then caps steps, as in the
+    # per-query wrapper
+    return _batched_two_phase_list_scan(
+        targets, order_desc, t_sorted_desc, U, k, chunk,
+        max_rounds if chunk == 1 else -1,
+        max_rounds, layout, ta_rounds=chunk > 1, sign=sign, dense=dense,
+        tail_pallas=tail_pallas, m_real=m_real)
 
 
 # ---------------------------------------------------------------------------

@@ -140,17 +140,22 @@ def merge_block_into_carry_batched(top_vals, top_ids, masked_scores,
                                    rows, k):
     """Batched :func:`_merge_block_into_carry`: a shared tile's scores.
 
-    One block of ``[B, C]`` masked scores over ONE shared id row vector
-    ``rows [C]`` (the lockstep batched scans: every query reads the same
-    contiguous tile), merged into every query's ``[B, K]`` carry. Same
-    two-stage invariant as the per-query helper: block-local
-    ``top_k(C -> K)`` over the bare scores, pad to K lanes, then the O(K)
-    sorted merge — never ``top_k`` over a ``K + C`` concatenation.
+    One block of ``[B, C]`` masked scores over an id vector ``rows`` that
+    is either SHARED across the batch (``[C]`` — the lockstep batched
+    scans where every query reads the same contiguous tile: the norm
+    scan, the single-sign list prefix) or per-query (``[B, C]`` — the
+    mixed-sign batched list scan, whose head/tail direction select gives
+    each query its own candidate ids), merged into every query's
+    ``[B, K]`` carry. Same two-stage invariant as the per-query helper:
+    block-local ``top_k(C -> K)`` over the bare scores, pad to K lanes,
+    then the O(K) sorted merge — never ``top_k`` over a ``K + C``
+    concatenation.
     """
     B, c = masked_scores.shape
     kk = min(k, c)
     bv, bpos = jax.lax.top_k(masked_scores, kk)          # [B, kk]
-    bi = rows[bpos]
+    bi = rows[bpos] if rows.ndim == 1 \
+        else jnp.take_along_axis(rows, bpos, axis=1)
     if kk < k:
         bv = jnp.concatenate(
             [bv, jnp.full((B, k - kk), NEG_INF, bv.dtype)], axis=1)
@@ -418,5 +423,182 @@ def pruned_block_scan(
             init = body(init)
     final = jax.lax.while_loop(cond, body, init)
     depth = final.rounds if chunk > 1 else final.step
+    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
+    return (res, final) if return_state else res
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedScanStrategy:
+    """A batch-NATIVE strategy: one shared enumeration for the whole batch.
+
+    Where :class:`ScanStrategy` under ``jax.vmap`` replicates every slice,
+    matvec, and bound lookup per query, a batched strategy answers each
+    step ONCE for the batch — the tile slice and the score matmul are
+    shared, and only the quantities that genuinely vary per query
+    (scores, freshness, bounds) carry a leading ``B`` axis.
+
+    Attributes:
+      block: ``step -> (ids, scores, fresh)`` where ``ids`` is ``[C]``
+        (shared candidate row — every query reads the same tile) or
+        ``[B, C]`` (per-query ids, e.g. the mixed-sign list scan whose
+        head/tail select differs per query), ``scores`` is ``[B, C]``,
+        and ``fresh`` is ``[B, C]`` bool — True where the slot is the
+        FIRST enumeration of its item for that query AND the slot is
+        active. Inactive/pad slots must be False.
+      bound: ``step -> [B]`` upper bound per query on every item not yet
+        enumerated after the block (``[B, rounds_per_step]`` per-round
+        Eq. 3 bounds in chunked mode).
+      num_steps / rounds_per_step / num_rounds / num_steps_dynamic /
+      num_rounds_dynamic: as in :class:`ScanStrategy` (the dynamic caps
+        are shared scalars — the enumeration axis is query-independent).
+    """
+
+    block: Callable[[Array], Tuple[Array, Array, Array]]
+    bound: Callable[[Array], Array]
+    num_steps: int
+    rounds_per_step: int = 1
+    num_rounds: Optional[int] = None
+    num_steps_dynamic: Optional[Array] = None
+    num_rounds_dynamic: Optional[Array] = None
+
+
+class BatchedScanState(NamedTuple):
+    step: Array         # scalar: blocks consumed by the batch-level loop
+    steps: Array        # [B] blocks each query consumed while live
+    top_vals: Array     # [B, K] running top scores, descending
+    top_ids: Array      # [B, K] their item ids
+    n_scored: Array     # [B] per-query score evaluations
+    rounds: Array       # [B] per-query sub-rounds (chunked mode)
+    lower: Array        # [B] running K-th best
+    upper: Array        # [B] bound on every unseen item
+
+
+def batched_pruned_scan(
+    U: Array,
+    strategy: BatchedScanStrategy,
+    k: int,
+    dtype,
+    max_steps: int = -1,
+    max_rounds: int = -1,
+    return_state: bool = False,
+):
+    """The batch-level pruned scan: ONE ``while_loop`` for the whole batch.
+
+    Replaces ``vmap(pruned_block_scan)`` for strategies that can share
+    their enumeration across queries (the list prefix, the norm order):
+    the loop runs until every query has certified (``cond`` is an
+    ``any``), so its step count is the MAX live query's depth, and every
+    per-query state update is gated on that query's own ``live``
+    predicate — a lane whose ``lower >= upper`` is frozen, exactly as a
+    certified query under the vmapped driver stops accumulating. Counts
+    (``n_scored``, per-query ``steps``/``rounds``) therefore equal the
+    sequential per-query oracle's even though slower queries keep the
+    shared loop running (DESIGN.md §11).
+
+    ``depth`` in the returned :class:`~repro.core.naive.TopKResult` is
+    per-query blocks consumed (``rounds`` in chunked mode), matching
+    ``vmap(pruned_block_scan)`` field-for-field. ``return_state=True``
+    additionally returns the final :class:`BatchedScanState`; its
+    per-lane ``steps`` is the ABSOLUTE per-query block cursor a chained
+    per-query tail phase resumes from (DESIGN.md §7).
+    """
+    B = U.shape[0]
+    chunk = strategy.rounds_per_step
+    cap = strategy.num_steps if max_steps < 0 else min(max_steps,
+                                                       strategy.num_steps)
+    if chunk > 1:
+        total_rounds = (strategy.num_rounds if strategy.num_rounds is not None
+                        else strategy.num_steps * chunk)
+        round_cap = (total_rounds if max_rounds < 0
+                     else min(max_rounds, total_rounds))
+        cap = min(cap, -(-round_cap // chunk))
+    else:
+        round_cap = cap
+    cap_eff = cap
+    round_cap_eff = round_cap
+    if chunk > 1 and strategy.num_rounds_dynamic is not None:
+        round_cap_eff = jnp.minimum(round_cap, strategy.num_rounds_dynamic)
+        cap_eff = jnp.minimum(cap_eff, (round_cap_eff + chunk - 1) // chunk)
+    if strategy.num_steps_dynamic is not None:
+        cap_eff = jnp.minimum(cap_eff, strategy.num_steps_dynamic)
+
+    def cond(s: BatchedScanState):
+        return jnp.logical_and(s.step < cap_eff,
+                               jnp.any(s.lower < s.upper))
+
+    def body(s: BatchedScanState):
+        live = s.lower < s.upper                              # [B]
+        ids, scores, fresh = strategy.block(s.step)
+        C = scores.shape[1]
+        if chunk > 1:
+            # the closed-form sequential-round recovery of `chunked_body`,
+            # vectorised over the batch: each lane stops at ITS sequential
+            # round, candidates past it are masked from merge and counts
+            ubs = strategy.bound(s.step)                      # [B, chunk]
+            base_round = s.step * chunk
+            cap_local = jnp.clip(round_cap_eff - base_round, 0, chunk)
+            tags = jnp.tile(jnp.arange(chunk, dtype=jnp.int32), C // chunk)
+            eligible = jnp.logical_and(fresh, tags[None, :] < cap_local)
+            cand = jnp.where(eligible, scores, NEG_INF)
+            all_vals = jnp.concatenate([s.top_vals, cand], axis=1)
+            all_tags = jnp.concatenate(
+                [jnp.full((k,), -1, jnp.int32), tags])        # [k + C]
+            js = jnp.arange(chunk, dtype=jnp.int32)
+            reach = jnp.logical_and(
+                all_tags[None, None, :] <= js[None, :, None],
+                all_vals[:, None, :] >= ubs[:, :, None])      # [B, chunk, k+C]
+            stop = jnp.logical_and(
+                jnp.sum(reach, axis=2) >= k,
+                js[None, :] < cap_local)                      # [B, chunk]
+            j_stop = jnp.argmax(stop, axis=1)                 # [B]
+            processed = jnp.where(jnp.any(stop, axis=1), j_stop + 1,
+                                  cap_local)                  # [B]
+            done = jnp.logical_and(fresh, tags[None, :] < processed[:, None])
+            masked = jnp.where(done, scores, NEG_INF)
+            new_vals, new_ids = merge_block_into_carry_batched(
+                s.top_vals, s.top_ids, masked, ids, k)
+            upper_new = jnp.where(
+                processed > 0,
+                jnp.take_along_axis(
+                    ubs, jnp.maximum(processed - 1, 0)[:, None],
+                    axis=1)[:, 0],
+                s.upper)
+            n_inc = jnp.sum(done, axis=1).astype(jnp.int32)
+            r_inc = processed.astype(jnp.int32)
+        else:
+            masked = jnp.where(fresh, scores, NEG_INF)
+            new_vals, new_ids = merge_block_into_carry_batched(
+                s.top_vals, s.top_ids, masked, ids, k)
+            upper_new = strategy.bound(s.step)                # [B]
+            n_inc = jnp.sum(fresh, axis=1).astype(jnp.int32)
+            r_inc = jnp.zeros((B,), jnp.int32)
+        gate = live[:, None]
+        return BatchedScanState(
+            step=s.step + 1,
+            steps=jnp.where(live, s.steps + 1, s.steps),
+            top_vals=jnp.where(gate, new_vals, s.top_vals),
+            top_ids=jnp.where(gate, new_ids, s.top_ids),
+            n_scored=jnp.where(live, s.n_scored + n_inc, s.n_scored),
+            rounds=jnp.where(live, s.rounds + r_inc, s.rounds),
+            lower=jnp.where(live, new_vals[:, k - 1], s.lower),
+            upper=jnp.where(live, upper_new, s.upper),
+        )
+
+    init = BatchedScanState(
+        step=jnp.int32(0),
+        steps=jnp.zeros((B,), jnp.int32),
+        top_vals=jnp.full((B, k), NEG_INF, dtype=dtype),
+        top_ids=jnp.full((B, k), -1, dtype=jnp.int32),
+        n_scored=jnp.zeros((B,), jnp.int32),
+        rounds=jnp.zeros((B,), jnp.int32),
+        lower=jnp.full((B,), NEG_INF, dtype=dtype),
+        upper=jnp.full((B,), jnp.inf, dtype=dtype),
+    )
+    if cap >= 1:
+        # first block is unconditionally live for every lane — unroll it
+        # (same literal-folding win as the per-query driver)
+        init = body(init)
+    final = jax.lax.while_loop(cond, body, init)
+    depth = final.rounds if chunk > 1 else final.steps
     res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
     return (res, final) if return_state else res

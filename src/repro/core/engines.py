@@ -102,7 +102,9 @@ import numpy as np
 
 from repro.core.blocked import (
     blocked_topk,
+    blocked_topk_batched_native,
     chunked_ta_topk,
+    chunked_ta_topk_batched_native,
     norm_pruned_topk_batched,
 )
 from repro.core.driver import NEG_INF
@@ -112,6 +114,7 @@ from repro.core.layout import (DEFAULT_PREFIX_DEPTH,
                                build_layout, pad_rank_by_item,
                                pad_zero_rows)
 from repro.core.naive import TopKResult
+from repro.core.strategies import sign_bucket, sign_bucket_label
 
 Array = jnp.ndarray
 
@@ -161,9 +164,17 @@ def pad_to_bucket(U: "Array") -> "Array":
 #: ``engine_compiles_per_compaction`` (DESIGN.md §10).
 _TRACE_TOTALS: Dict[str, int] = {}
 
+#: Per-sign-bucket trace counters: ``(engine, batch-cfg tuple) -> count``.
+#: The batch cfg is the sign bucket for the list engines, ``()`` for
+#: engines without batch specialisation — so this resolves exactly which
+#: sign-specialised variants have been compiled (DESIGN.md §11).
+_TRACE_DETAIL: Dict[Tuple[str, tuple], int] = {}
 
-def _note_trace(name: str) -> None:
+
+def _note_trace(name: str, bcfg: tuple = ()) -> None:
     _TRACE_TOTALS[name] = _TRACE_TOTALS.get(name, 0) + 1
+    key = (name, bcfg)
+    _TRACE_DETAIL[key] = _TRACE_DETAIL.get(key, 0) + 1
 
 
 def trace_totals() -> Dict[str, int]:
@@ -171,17 +182,26 @@ def trace_totals() -> Dict[str, int]:
     return dict(_TRACE_TOTALS)
 
 
+def trace_detail() -> Dict[Tuple[str, tuple], int]:
+    """Snapshot of the per-(engine, sign-bucket) trace counters."""
+    return dict(_TRACE_DETAIL)
+
+
 #: engine name -> the module-level jitted executor
 #: ``(args, U, *, k, cfg) -> TopKResult``. ONE executor per engine for
 #: the whole process: jax's own trace cache (keyed by arg shapes/dtypes/
 #: treedefs + the static ``k``/``cfg``) IS the compile cache, which is
-#: what makes it snapshot- and context-free.
+#: what makes it snapshot- and context-free. ``cfg`` is the nested pair
+#: ``(arg_config(ctx), batch_config(ctx, U))`` — the second component is
+#: the per-BATCH static bucket (the sign bucket for the list engines,
+#: DESIGN.md §11), which is how sign-specialised variants join the
+#: compile key without touching the snapshot-free arguments.
 _ARG_EXECUTORS: Dict[str, Callable] = {}
 
 
 def _make_arg_executor(name: str, run_args: Callable) -> Callable:
     def run(args, U, k, cfg):
-        _note_trace(name)
+        _note_trace(name, cfg[1])
         return run_args(args, U, k, cfg)
 
     return jax.jit(run, static_argnames=("k", "cfg"))
@@ -418,12 +438,22 @@ class EngineContext:
 
     def _dispatch_args(self, engine: "Engine", args, U: Array,
                       k: int) -> TopKResult:
-        """Run the shared executor, attributing any trace to this context."""
-        cfg = engine.arg_config(self) if engine.arg_config is not None \
+        """Run the shared executor, attributing any trace to this context.
+
+        The static cfg is the nested pair ``(arg_config(ctx),
+        batch_config(ctx, U))``: the second component — the batch's sign
+        bucket for the list engines — is computed host-side per dispatch
+        (one ``np.asarray`` read of the query VALUES; for device-resident
+        batches that is a transfer of an input, never a sync on pending
+        device work) and joins the compile key, selecting the
+        sign-specialised trace (DESIGN.md §11)."""
+        acfg = engine.arg_config(self) if engine.arg_config is not None \
             else ()
+        bcfg = engine.batch_config(self, U) \
+            if engine.batch_config is not None else ()
         fn = _ARG_EXECUTORS[engine.name]
         before = _TRACE_TOTALS.get(engine.name, 0)
-        res = fn(args, U, k=int(k), cfg=cfg)
+        res = fn(args, U, k=int(k), cfg=(acfg, bcfg))
         delta = _TRACE_TOTALS.get(engine.name, 0) - before
         if delta:
             self.trace_counts[engine.name] = (
@@ -509,7 +539,14 @@ class EngineContext:
         into it compile-free too (the streaming serving pattern,
         DESIGN.md §10). Oversized buckets are padded views built
         transiently — they are not pinned in this context's args cache.
-        Returns self for chaining.
+
+        **Sign buckets** (DESIGN.md §11): engines with batch
+        specialisation (``ta``/``bta`` once the list layout is on) are
+        warmed with one representative batch per common sign bucket —
+        nonneg-dense, nonpos-dense, mixed, and nonneg-sparse (the bucket
+        ``auto``'s sparse→TA route produces) — so serving any of those
+        buckets adds 0 retraces; the rare nonpos-sparse bucket pays its
+        one trace lazily. Returns self for chaining.
         """
         names = list(engines) if engines is not None else [
             e.name for e in list_engines() if e.has_executable]
@@ -526,9 +563,9 @@ class EngineContext:
                     args = self.engine_args(eng, mb, cache=(mb == own))
                     for b in batch_sizes:
                         bucket = batch_bucket(b)
-                        U = jnp.ones((bucket, r), self.targets.dtype)
-                        res = self._dispatch_args(eng, args, U, k)
-                        jax.block_until_ready(res.values)
+                        for U in self._warm_batches(eng, bucket, r):
+                            res = self._dispatch_args(eng, args, U, k)
+                            jax.block_until_ready(res.values)
             else:
                 for b in batch_sizes:
                     bucket = batch_bucket(b)
@@ -536,6 +573,21 @@ class EngineContext:
                     res = self.compiled(eng, int(k), bucket)(U)
                     jax.block_until_ready(res.values)
         return self
+
+    def _warm_batches(self, eng: "Engine", bucket: int, r: int) -> list:
+        """Representative warm batches: one per sign bucket the engine
+        specialises on, or just the all-ones batch for engines without
+        batch specialisation (see :meth:`warmup`)."""
+        ones = jnp.ones((bucket, r), self.targets.dtype)
+        if eng.batch_config is None or not eng.batch_config(self, ones):
+            return [ones]
+        dt = np.dtype(self.targets.dtype)
+        mixed = np.ones((bucket, r), dt)
+        mixed[:, 1::2] = -1.0
+        sparse = np.ones((bucket, r), dt)
+        sparse[:, 1::2] = 0.0
+        # buckets: (1,True), (-1,True), (0,False), (1,False)
+        return [ones, -ones, jnp.asarray(mixed), jnp.asarray(sparse)]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -578,6 +630,11 @@ class Engine:
     run_args: Optional[
         Callable[[Any, Array, int, tuple], TopKResult]] = None
     arg_config: Optional[Callable[["EngineContext"], tuple]] = None
+    #: optional ``(ctx, U) -> tuple``: a HOST-computed static bucket of
+    #: the query batch's VALUES that joins the executor compile key (the
+    #: sign bucket for the list engines, DESIGN.md §11). Must be cheap,
+    #: hashable, and (); for engines without batch specialisation.
+    batch_config: Optional[Callable[["EngineContext", Any], tuple]] = None
     exact: bool = True
     needs_index: bool = True
     supports_batch: bool = True
@@ -677,6 +734,19 @@ def _list_layout(ctx: EngineContext):
         else None
 
 
+def _list_batch_cfg(ctx: EngineContext, U) -> tuple:
+    """Sign bucket of the query batch, joined to the compile key.
+
+    With the list layout off the batched-native prefix scan never runs,
+    so the bucket is dropped from the key — every batch shares ONE
+    traced variant, exactly the PR-5 behaviour (and the small-M trace
+    count tests stay valid).
+    """
+    if ctx.resolved_prefix_depth <= 0:
+        return ()
+    return sign_bucket(U)
+
+
 def _tail_pallas(ctx: EngineContext) -> bool:
     # gather-fused Pallas tail scoring only pays on real TPU backends
     return (jax.default_backend() == "tpu"
@@ -702,14 +772,30 @@ def _ta_cfg(ctx: EngineContext) -> tuple:
 def _ta_run(args, U, k, cfg):
     # chunked TA: block-shaped work per step, sequential-round accounting
     # (count-faithful to the paper's Algorithm 2). With the list_major
-    # layout the rounds inside the prefix are gather-free (DESIGN.md §7).
-    chunk, max_rounds, tail_pallas = cfg
+    # layout the rounds inside the prefix are gather-free (DESIGN.md §7),
+    # and a sign-bucketed batch takes the batched-native prefix scan —
+    # ONE shared tile enumeration for the whole batch (DESIGN.md §11).
+    (chunk, max_rounds, tail_pallas), bcfg = cfg
+    lay = args["layout"]
+
+    if bcfg and lay is not None and lay.serves_sign(bcfg[0]) \
+            and lay.prefix_steps(chunk) > 0:
+        sign, dense = bcfg
+        return chunked_ta_topk_batched_native(
+            args["targets"], args["order_desc"], args["t_sorted_desc"],
+            U, k, chunk=chunk, max_rounds=max_rounds, layout=lay,
+            sign=sign, dense=dense, tail_pallas=tail_pallas,
+            m_real=args["m_real"])
+
+    # vmapped fallback; a single-sided layout cannot feed the per-query
+    # (both-direction) prefix path, so it degrades to the gather scan
+    lay_pq = lay if (lay is not None and lay.two_sided) else None
 
     def one(u):
         return chunked_ta_topk(args["targets"], args["order_desc"],
                                args["t_sorted_desc"], args["rank_desc"],
                                u, k, chunk=chunk, max_rounds=max_rounds,
-                               layout=args["layout"],
+                               layout=lay_pq,
                                tail_pallas=tail_pallas,
                                m_real=args["m_real"])
 
@@ -721,13 +807,25 @@ def _bta_cfg(ctx: EngineContext) -> tuple:
 
 
 def _bta_run(args, U, k, cfg):
-    block_size, max_blocks, tail_pallas = cfg
+    (block_size, max_blocks, tail_pallas), bcfg = cfg
+    lay = args["layout"]
+
+    if bcfg and lay is not None and lay.serves_sign(bcfg[0]) \
+            and lay.prefix_steps(block_size) > 0:
+        sign, dense = bcfg
+        return blocked_topk_batched_native(
+            args["targets"], args["order_desc"], args["t_sorted_desc"],
+            U, k, block_size=block_size, max_blocks=max_blocks,
+            layout=lay, sign=sign, dense=dense, tail_pallas=tail_pallas,
+            m_real=args["m_real"])
+
+    lay_pq = lay if (lay is not None and lay.two_sided) else None
 
     def one(u):
         return blocked_topk(args["targets"], args["order_desc"],
                             args["t_sorted_desc"], u, k, block_size,
                             max_blocks, rank_desc=args["rank_desc"],
-                            layout=args["layout"],
+                            layout=lay_pq,
                             tail_pallas=tail_pallas,
                             m_real=args["m_real"])
 
@@ -760,7 +858,7 @@ def _norm_cfg(ctx: EngineContext) -> tuple:
 
 
 def _norm_run(args, U, k, cfg):
-    block_size, max_blocks = cfg
+    (block_size, max_blocks), _ = cfg
     mb = args["targets_by_norm"].shape[0]
     # batched-native scan: every query walks the SAME norm-ordered
     # prefix, so one shared tile slice + one [B,R]@[R,block] matmul
@@ -790,7 +888,7 @@ def _norm_sharded_cfg(ctx: EngineContext) -> tuple:
 
 def _norm_sharded_run(args, U, k, cfg):
     from repro.core.sharded import sharded_norm_topk
-    block_size, max_blocks, mesh = cfg
+    (block_size, max_blocks, mesh), _ = cfg
     scan = sharded_norm_topk(mesh, ("data",))
     return scan(args["targets_sharded"], args["norms_sharded"],
                 args["ids_sharded"], U, k, block_size, max_blocks)
@@ -821,18 +919,37 @@ def _host_nnz_frac(U) -> float:
     return float(np.count_nonzero(arr)) / max(arr.size, 1)
 
 
+#: batch size at which the batched-native list scan amortises its shared
+#: tile enumeration well enough to prefer the list engines (DESIGN.md §11)
+BATCHED_LIST_MIN_B = 8
+
+
 def select_engine(ctx: EngineContext, U) -> Engine:
     """The ``auto`` policy: pick an engine for this query batch.
 
-    Decides from two cheap HOST-side statistics: batch sparsity ``nnz(u)``
-    (sparse queries make TA's per-round cost collapse to the active lists)
-    and the catalogue norm spectrum (a decaying spectrum lets the
-    Cauchy-Schwarz scan certify after a few contiguous blocks — the Pallas
-    kernel's best case; a flat spectrum makes it a full scan, so BTA wins).
+    Decides from three cheap HOST-side statistics: batch sparsity
+    ``nnz(u)`` (sparse queries make TA's per-round cost collapse to the
+    active lists), the BATCH SIZE (the batched-native list scan shares
+    one prefix-tile enumeration across the batch, so the list engines'
+    per-query cost collapses at ``B >= BATCHED_LIST_MIN_B`` — below
+    that they pay the per-query lockstep scan), and the catalogue norm
+    spectrum (a decaying spectrum lets the Cauchy-Schwarz scan certify
+    after a few contiguous blocks — the Pallas kernel's best case; a
+    flat spectrum makes it a full scan, so BTA wins when the batched
+    list path is live).
     """
-    if _host_nnz_frac(U) < 0.25:
+    arr = U if isinstance(U, np.ndarray) else np.asarray(U)
+    b = 1 if arr.ndim < 2 else arr.shape[0]
+    batched_lists = (ctx.resolved_prefix_depth > 0
+                     and batch_bucket(b) >= BATCHED_LIST_MIN_B)
+    if _host_nnz_frac(arr) < 0.25 and \
+            (batched_lists or ctx.resolved_prefix_depth <= 0):
+        # sparse queries: TA's rounds collapse to the active lists.
+        # With the layout ON but the batch too small to amortise the
+        # batched scan, the per-query lockstep loop would dominate —
+        # fall through to the contiguous norm scan instead.
         return get_engine("ta")
-    if ctx.norm_decay < 0.5:
+    if ctx.norm_decay < 0.5 or not batched_lists:
         return get_engine(
             "pallas" if jax.default_backend() == "tpu" else "norm")
     return get_engine("bta")
@@ -841,9 +958,11 @@ def select_engine(ctx: EngineContext, U) -> Engine:
 def auto_candidates():
     """Engine names :func:`select_engine` can resolve to on this backend.
 
-    Warming exactly this set covers every dispatch ``auto`` can make;
-    warming beyond it (``norm_sharded`` in particular, whose layout build
-    copies the whole catalogue) is wasted startup work.
+    Warming exactly this set covers every dispatch ``auto`` can make
+    (including the small-batch routes that prefer the shared-tile norm
+    scan over the per-query list loop); warming beyond it
+    (``norm_sharded`` in particular, whose layout build copies the whole
+    catalogue) is wasted startup work.
     """
     return ["ta", "bta",
             "pallas" if jax.default_backend() == "tpu" else "norm"]
@@ -955,19 +1074,21 @@ register_engine(Engine(
     description="full matmul + lax.top_k (strongest wall-clock baseline)"))
 register_engine(Engine(
     name="ta", make_args=_list_args, run_args=_ta_run, arg_config=_ta_cfg,
+    batch_config=_list_batch_cfg,
     exact=True, needs_index=True,
     supports_batch=True, backend="jax", layout="list_major",
     traffic=_list_traffic,
     description="Threshold Algorithm rounds (paper Alg. 2; chunked "
-                "execution, sequential-round accounting, contiguous "
-                "list-prefix tiles)"))
+                "execution, sequential-round accounting, batched-native "
+                "sign-specialised list-prefix tiles)"))
 register_engine(Engine(
     name="bta", make_args=_list_args, run_args=_bta_run,
-    arg_config=_bta_cfg, exact=True, needs_index=True,
+    arg_config=_bta_cfg, batch_config=_list_batch_cfg,
+    exact=True, needs_index=True,
     supports_batch=True, backend="jax", layout="list_major",
     traffic=_list_traffic,
-    description="Block Threshold Algorithm (MXU-shaped TA, contiguous "
-                "list-prefix tiles)"))
+    description="Block Threshold Algorithm (MXU-shaped TA, batched-native "
+                "sign-specialised list-prefix tiles)"))
 register_engine(Engine(
     name="norm", make_args=_norm_args, run_args=_norm_run,
     arg_config=_norm_cfg, exact=True, needs_index=True,

@@ -156,14 +156,24 @@ class ListMajorLayout:
         automatically the "layout-shape" component of the
         argument-passing compile key, DESIGN.md §10; at the adaptive
         default it is the constant 2048 for every catalogue ≥ 32k).
+
+    **Single-sided variants** (DESIGN.md §11): either direction's tiles
+    may be ``None`` (``build_list_major(sides=("head",))`` or
+    :meth:`sided`), halving the prefix footprint for deployments whose
+    queries are known single-sign (e.g. non-negative CF similarity
+    weights). The batched sign-bucket dispatch serves the matching
+    bucket from the remaining side and falls back to the gather path for
+    buckets that would need the missing one; ``rank_by_item`` is always
+    present. The None-ness is pytree STRUCTURE, so it is part of the
+    executor compile key automatically.
     """
 
-    head_rows: Array
-    tail_rows: Array
-    head_ids: Array
-    tail_ids: Array
-    head_ranks: Array
-    tail_ranks: Array
+    head_rows: Optional[Array]
+    tail_rows: Optional[Array]
+    head_ids: Optional[Array]
+    tail_ids: Optional[Array]
+    head_ranks: Optional[Array]
+    tail_ranks: Optional[Array]
     rank_by_item: Array
     prefix_depth: int
 
@@ -172,6 +182,38 @@ class ListMajorLayout:
     def prefix_steps(self, block_size: int) -> int:
         """Whole blocks of ``block_size`` covered by the prefix."""
         return self.prefix_depth // max(block_size, 1)
+
+    @property
+    def sides(self) -> tuple:
+        """The prefix directions this layout materialised."""
+        out = ()
+        if self.head_rows is not None:
+            out += ("head",)
+        if self.tail_rows is not None:
+            out += ("tail",)
+        return out
+
+    @property
+    def two_sided(self) -> bool:
+        return self.head_rows is not None and self.tail_rows is not None
+
+    def serves_sign(self, sign: int) -> bool:
+        """Can the prefix serve a batch of this sign bucket? (``0`` —
+        mixed — needs both directions.)"""
+        if sign > 0:
+            return self.head_rows is not None
+        if sign < 0:
+            return self.tail_rows is not None
+        return self.two_sided
+
+    def sided(self, side: str) -> "ListMajorLayout":
+        """Drop the other direction's tiles (halve the prefix footprint)."""
+        if side not in ("head", "tail"):
+            raise ValueError(f"side must be 'head' or 'tail', got {side!r}")
+        drop = dict.fromkeys(
+            ("tail_rows", "tail_ids", "tail_ranks") if side == "head"
+            else ("head_rows", "head_ids", "head_ranks"))
+        return dataclasses.replace(self, **drop)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -280,24 +322,37 @@ def build_norm_major(targets, index=None, **_) -> NormMajorLayout:
 
 
 def build_list_major(targets, index, prefix_depth: Optional[int] = None,
+                     sides: tuple = ("head", "tail"),
                      **_) -> ListMajorLayout:
-    """Materialise the list prefixes (offline, ``O(R * P * R)`` copy)."""
+    """Materialise the list prefixes (offline, ``O(R * P * R)`` copy).
+
+    ``sides`` selects which walk directions get prefix tiles; dropping
+    one halves the footprint for single-sign deployments (DESIGN.md §11
+    — the sign-bucket dispatch falls back to the gather path for
+    buckets the remaining side cannot serve).
+    """
+    if not sides or any(s not in ("head", "tail") for s in sides):
+        raise ValueError(f"sides must be a non-empty subset of "
+                         f"('head', 'tail'), got {sides!r}")
     T_np = np.asarray(targets, np.float32)
     M, R = T_np.shape
     P = int(min(M, DEFAULT_PREFIX_DEPTH if prefix_depth is None
                 else prefix_depth))
     P = max(P, 1)
     od = np.asarray(index.order_desc)                       # [R, M]
-    head_ids = np.ascontiguousarray(od[:, :P])
-    tail_ids = np.ascontiguousarray(od[:, ::-1][:, :P])
     rank_by_item = np.ascontiguousarray(np.asarray(index.rank_desc).T)
+
+    def _side(ids):
+        ids = np.ascontiguousarray(ids)
+        return (jnp.asarray(np.ascontiguousarray(T_np[ids])),
+                jnp.asarray(ids),
+                jnp.asarray(np.ascontiguousarray(rank_by_item[ids])))
+
+    head = _side(od[:, :P]) if "head" in sides else (None, None, None)
+    tail = _side(od[:, ::-1][:, :P]) if "tail" in sides else (None,) * 3
     return ListMajorLayout(
-        head_rows=jnp.asarray(np.ascontiguousarray(T_np[head_ids])),
-        tail_rows=jnp.asarray(np.ascontiguousarray(T_np[tail_ids])),
-        head_ids=jnp.asarray(head_ids),
-        tail_ids=jnp.asarray(tail_ids),
-        head_ranks=jnp.asarray(np.ascontiguousarray(rank_by_item[head_ids])),
-        tail_ranks=jnp.asarray(np.ascontiguousarray(rank_by_item[tail_ids])),
+        head_rows=head[0], head_ids=head[1], head_ranks=head[2],
+        tail_rows=tail[0], tail_ids=tail[1], tail_ranks=tail[2],
         rank_by_item=jnp.asarray(rank_by_item),
         prefix_depth=P,
     )

@@ -45,12 +45,49 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.driver import ScanStrategy
+from repro.core.driver import BatchedScanStrategy, ScanStrategy
 
 Array = jnp.ndarray
 
 _INT_MAX = 2147483647
+
+
+def sign_bucket(U) -> tuple:
+    """Host-side sign bucket of a query batch: ``(sign, dense)``.
+
+    ``sign`` is ``+1`` when every weight in the batch is >= 0 (the scan
+    only ever walks HEAD prefixes), ``-1`` when every weight is <= 0
+    (tail prefixes only), ``0`` otherwise (mixed — per-(query, list)
+    direction select). ``dense`` is True when NO weight is zero, which
+    lets the single-sign batched strategies share ONE freshness-key tile
+    across the whole batch (the keys become query-independent); the
+    mixed bucket always reports ``dense=False`` — its keys are per-query
+    regardless, so fewer buckets means fewer compiles.
+
+    This is a HOST read of the query values (``np.asarray``). Query
+    batches are host-origin in the serving path; a device-resident batch
+    pays one transfer, never a trace.
+    """
+    arr = np.asarray(U)
+    if arr.size == 0:
+        return (0, False)
+    has_neg = bool((arr < 0).any())
+    has_pos = bool((arr > 0).any())
+    if has_neg and has_pos:
+        return (0, False)
+    dense = not bool((arr == 0).any())
+    return ((-1, dense) if has_neg else (1, dense))
+
+
+def sign_bucket_label(bucket: tuple) -> str:
+    """Readable label for a :func:`sign_bucket` value (stats/artifacts)."""
+    if not bucket:
+        return "unbucketed"
+    sign, dense = bucket
+    name = {1: "nonneg", -1: "nonpos", 0: "mixed"}[sign]
+    return f"{name}-{'dense' if dense else 'sparse'}"
 
 
 def _keys_from_ranks(ranks: Array, u: Array, m: int) -> Array:
@@ -392,6 +429,159 @@ def list_prefix_strategy(
     return ScanStrategy(candidates=candidates, bound=block_bound,
                         num_steps=n_steps, track_visited=False,
                         fresh_mask=fresh_mask, score=score)
+
+
+def batched_list_prefix_strategy(
+    layout,
+    t_sorted_desc: Array,
+    U: Array,
+    block_size: int,
+    sign: int = 0,
+    dense: bool = False,
+    ta_rounds: bool = False,
+    m_real=None,
+) -> BatchedScanStrategy:
+    """Batch-native :func:`list_prefix_strategy`: one shared tile per step.
+
+    The whole batch consumes the SAME contiguous prefix block each step
+    (the enumeration axis — walk depth — is query-independent), so the
+    tile slice happens once and scoring is a single ``[C, R] @ [R, B]``
+    matmul instead of B vmapped matvecs (DESIGN.md §11). What remains
+    per-query is exactly what the sequential semantics require: scores,
+    Eq. 3 bounds, and the freshness masks, all computed batched from the
+    shared rank tiles via :func:`_keys_from_ranks` — never a scatter
+    (standing XLA:CPU gotcha).
+
+    ``sign`` is the STATIC sign bucket of the batch
+    (:func:`sign_bucket`): ``+1`` (all weights >= 0) reads only the HEAD
+    tiles, ``-1`` (all <= 0) only the TAIL tiles — halving prefix
+    traffic and making candidate ids shared ``[C]`` vectors — while
+    ``0`` (mixed) reads both and selects per (query, list). ``dense``
+    (no zero weights, single-sign only) makes the freshness keys
+    query-INDEPENDENT: with every list active and all flips identical,
+    ``_keys_from_ranks`` collapses to one shared ``[R, B]`` key tile for
+    the batch, evaluated with a constant direction surrogate so the keys
+    are bit-identical to any dense query's of that sign.
+
+    The caller guarantees the bucket matches the batch (host-side exact
+    check in :func:`sign_bucket`); the bucket joins the engine executor
+    compile key, so each variant traces once per process.
+    """
+    side_ids = layout.head_ids if sign >= 0 else layout.tail_ids
+    R, P = side_ids.shape
+    M = layout.rank_by_item.shape[0]
+    m = M if m_real is None else m_real
+    B = U.shape[0]
+    C = R * block_size
+    neg = U < 0                                                # [B, R]
+    active = U != 0
+    n_steps = layout.prefix_steps(block_size)
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    rows_r = jnp.arange(R, dtype=jnp.int32)
+    # slot (r, j) lives at r*block_size + j; round-major key within block 0
+    slot_key = offs[None, :] * R + rows_r[:, None]             # [R, Bk]
+
+    def _slice(arr, step):
+        d0 = step * block_size
+        sizes = (R, block_size) + arr.shape[2:]
+        return jax.lax.dynamic_slice(
+            arr, (0, d0) + (0,) * (arr.ndim - 2), sizes)
+
+    def _single_sign_block(step):
+        if sign > 0:
+            ids_a, rows_a, ranks_a = (layout.head_ids, layout.head_rows,
+                                      layout.head_ranks)
+        else:
+            ids_a, rows_a, ranks_a = (layout.tail_ids, layout.tail_rows,
+                                      layout.tail_ranks)
+        ids = _slice(ids_a, step).reshape(-1)                  # [C] shared
+        tile = _slice(rows_a, step).reshape(C, R)
+        scores = (tile @ U.T).T                                # [B, C]
+        ranks = _slice(ranks_a, step)                          # [R, Bk, R]
+        abs_key = step * block_size * R + slot_key             # [R, Bk]
+        if dense:
+            # every list active, every flip identical -> the keys are
+            # query-independent; evaluate them ONCE with a constant
+            # direction surrogate of the bucket's sign
+            u_dir = jnp.full((R,), float(sign), U.dtype)
+            fk = _keys_from_ranks(ranks, u_dir, m)             # [R, Bk]
+            fresh = jnp.broadcast_to(
+                (fk == abs_key).reshape(1, C), (B, C))
+        else:
+            fk = jax.vmap(
+                lambda uq: _keys_from_ranks(ranks, uq, m))(U)  # [B, R, Bk]
+            fresh = jnp.logical_and(fk == abs_key[None],
+                                    active[:, :, None]).reshape(B, C)
+        return ids, scores, fresh
+
+    def _mixed_block(step):
+        h_ids = _slice(layout.head_ids, step)                  # [R, Bk]
+        t_ids = _slice(layout.tail_ids, step)
+        ids = jnp.where(neg[:, :, None], t_ids[None],
+                        h_ids[None]).reshape(B, C)             # [B, C]
+        h_tile = _slice(layout.head_rows, step).reshape(C, R)
+        t_tile = _slice(layout.tail_rows, step).reshape(C, R)
+        sh = (h_tile @ U.T).T                                  # [B, C]
+        st = (t_tile @ U.T).T
+        neg_rep = jnp.repeat(neg, block_size, axis=1,
+                             total_repeat_length=C)
+        scores = jnp.where(neg_rep, st, sh)
+        h_rk = _slice(layout.head_ranks, step)                 # [R, Bk, R]
+        t_rk = _slice(layout.tail_ranks, step)
+        rk = jnp.where(neg[:, :, None, None], t_rk[None], h_rk[None])
+        fk = jax.vmap(
+            lambda rq, uq: _keys_from_ranks(rq, uq, m))(rk, U)  # [B, R, Bk]
+        abs_key = step * block_size * R + slot_key
+        fresh = jnp.logical_and(fk == abs_key[None],
+                                active[:, :, None]).reshape(B, C)
+        return ids, scores, fresh
+
+    block = _single_sign_block if sign != 0 else _mixed_block
+
+    def _t_head(step):
+        """[R, Bk] sorted values at depths d0 .. d0+Bk-1 (never clamps:
+        prefix blocks satisfy d0 + Bk <= P <= m)."""
+        return jax.lax.dynamic_slice(
+            t_sorted_desc, (0, step * block_size), (R, block_size))
+
+    def _t_tail(step):
+        """[R, Bk] sorted values at ASCENDING-walk depths: column j holds
+        ``t[:, m-1-(d0+j)]``."""
+        start = m - block_size - step * block_size
+        sl = jax.lax.dynamic_slice(t_sorted_desc, (0, start),
+                                   (R, block_size))
+        return sl[:, ::-1]
+
+    u_pos = jnp.where(neg, 0.0, U)                             # [B, R]
+    u_neg = jnp.where(neg, U, 0.0)
+
+    def round_bounds(step):
+        # Eq. 3 at every depth of the block, per query: [B, Bk]
+        if sign > 0:
+            return U @ _t_head(step)
+        if sign < 0:
+            return U @ _t_tail(step)
+        return u_pos @ _t_head(step) + u_neg @ _t_tail(step)
+
+    def block_bound(step):
+        # bound at the block's last depth only — one [R] column per side
+        end = step * block_size + block_size - 1
+        t_h = jax.lax.dynamic_slice(t_sorted_desc, (0, end), (R, 1))[:, 0]
+        if sign > 0:
+            return U @ t_h
+        t_t = jax.lax.dynamic_slice(t_sorted_desc, (0, m - 1 - end),
+                                    (R, 1))[:, 0]
+        if sign < 0:
+            return U @ t_t
+        return u_pos @ t_h + u_neg @ t_t
+
+    if ta_rounds and block_size > 1:
+        return BatchedScanStrategy(block=block, bound=round_bounds,
+                                   num_steps=n_steps,
+                                   rounds_per_step=block_size,
+                                   num_rounds=n_steps * block_size)
+    return BatchedScanStrategy(block=block, bound=block_bound,
+                               num_steps=n_steps)
 
 
 def norm_block_strategy(

@@ -177,3 +177,36 @@ def threshold_topk_from_index(
     order, t_sorted, _ = index.query_views(u)   # direction handled in-strategy
     return threshold_topk(targets, order, t_sorted, u, k, max_rounds,
                           rank_desc=index.rank_desc)
+
+
+def threshold_topk_batched_from_index(
+    targets: Array, index: TopKIndex, U: Array, k: int,
+    chunk: int = 1, max_rounds: int = -1, layout=None,
+) -> TopKResult:
+    """Batched TA entry point: batched-native scan when a prefix layout
+    is given, vmapped per-query TA otherwise.
+
+    The batched-native path (DESIGN.md §11) enumerates ONE shared
+    prefix-tile slice per step for the whole batch, specialised on the
+    batch's sign bucket (host-computed from the query VALUES), with
+    per-query freshness masks and liveness gating keeping
+    ``n_scored``/``depth`` identical to the sequential-round semantics
+    of :func:`threshold_topk_np`. The REGISTRY ``ta`` engine routes
+    through the same machinery with compile-key management on top —
+    prefer :class:`repro.core.engines.EngineContext` for serving; this
+    wrapper is the direct, context-free form.
+    """
+    U = jnp.atleast_2d(jnp.asarray(U, targets.dtype))
+    if layout is not None and layout.prefix_steps(max(chunk, 1)) > 0:
+        # function-level import: strategies imports this module's oracle
+        from repro.core.blocked import chunked_ta_topk_batched_native
+        from repro.core.strategies import sign_bucket
+        sign, dense = sign_bucket(U)
+        if layout.serves_sign(sign):
+            return chunked_ta_topk_batched_native(
+                targets, index.order_desc, index.t_sorted_desc, U, k,
+                chunk=max(chunk, 1), max_rounds=max_rounds, layout=layout,
+                sign=sign, dense=dense)
+    return jax.vmap(
+        lambda u: threshold_topk_from_index(targets, index, u, k,
+                                            max_rounds))(U)

@@ -51,6 +51,7 @@ from repro.core.engines import (
     select_engine,
 )
 from repro.core.segments import SegmentedCatalogue
+from repro.core.strategies import sign_bucket_label
 
 Array = jnp.ndarray
 
@@ -71,6 +72,10 @@ class ServeStats:
     reflect stragglers like a post-mutation retrace or a compaction
     swap). ``delta_scored`` counts scores spent on the streaming delta
     segments, separating mutation-induced work from base-scan work.
+    ``sign_batches`` counts served batches per sign bucket (the compile
+    specialisation axis of the batched list scan, DESIGN.md §11) — a
+    bucket label appearing here that :meth:`TopKServer.warmup` did not
+    warm explains a one-off trace straggler in the latency ring.
     """
 
     n_queries: int = 0
@@ -80,6 +85,7 @@ class ServeStats:
     delta_scored: int = 0
     lat_us_ring: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
+    sign_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def scores_per_query(self) -> float:
@@ -221,7 +227,7 @@ class TopKServer:
         }
 
     def _record(self, method: str, res, dt: float, n: int,
-                delta_scored: int = 0):
+                delta_scored: int = 0, sign_label: str = ""):
         s = self.stats.setdefault(method, ServeStats())
         s.n_queries += n
         s.n_scored += int(np.sum(np.asarray(res.n_scored)))
@@ -229,15 +235,22 @@ class TopKServer:
         s.total_time_s += dt
         s.delta_scored += int(delta_scored) * n
         s.lat_us_ring.append(1e6 * dt / max(n, 1))
+        if sign_label:
+            s.sign_batches[sign_label] = s.sign_batches.get(sign_label,
+                                                            0) + 1
 
     def query(self, U: Array, k: int, method: str = "bta"):
         """U: [B, R] (or [R]). Returns TopKResult batched like U.
 
         ``method`` is any registry name (or alias) from
         :meth:`available_engines`; unknown names raise ``ValueError``.
-        ``auto`` dispatch reads its sparsity statistic from the incoming
-        HOST array — engine selection never enqueues work on the device
-        query stream. Once the catalogue has streamed mutations, results
+        ``auto`` dispatch reads its sparsity/batch-size statistics from
+        the incoming HOST array — engine selection never enqueues work
+        on the device query stream. Batch-specialised engines also
+        record each chunk's sign bucket in
+        :attr:`ServeStats.sign_batches` (the DESIGN.md §11 compile
+        axis), again a host-side read of input VALUES only. Once the
+        catalogue has streamed mutations, results
         carry GLOBAL item ids and reflect every mutation exactly (the
         segmented query path, DESIGN.md §9); a never-mutated server runs
         the raw engine path unchanged.
@@ -257,12 +270,18 @@ class TopKServer:
             chunk = U_all[i: i + self.max_batch]
             eng = (select_engine(self.ctx, chunk)
                    if engine.name == "auto" else engine)
+            # sign bucket of this chunk, for the per-bucket serve stats —
+            # only engines with batch specialisation pay the (host-side,
+            # input-value-only) read; it mirrors the bucket the dispatch
+            # itself computes for the compile key (DESIGN.md §11)
+            label = sign_bucket_label(eng.batch_config(self.ctx, chunk)) \
+                if eng.batch_config is not None else ""
             t0 = time.perf_counter()
             res, info = self.catalogue.query(eng, chunk, k)
             res = jax.tree_util.tree_map(np.asarray, res)
             dt = time.perf_counter() - t0
             self._record(eng.name, res, dt, chunk.shape[0],
-                         info.delta_scored)
+                         info.delta_scored, sign_label=label)
             outs.append(res)
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *outs)

@@ -1,0 +1,291 @@
+"""Batched-native list scan tests (DESIGN.md §11): one shared
+prefix-tile enumeration per step for the whole batch, per-query
+freshness masks and liveness gating, sign-specialised compiles.
+
+Covers the tentpole exactness contract — a MIXED batch (different sign
+patterns AND different stopping depths in one batch) must return the
+sequential oracle's values AND its ``n_scored``/``depth`` counts — at
+the off-by-one catalogue sizes M = 2^n - 1 / 2^n / 2^n + 1, in both the
+prefix-hit and prefix-overflow regimes, plus the sign-bucket compile-key
+accounting (warmed buckets add 0 retraces; an unseen bucket pays exactly
+one trace).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineContext,
+    blocked_topk,
+    get_engine,
+    naive_topk,
+    threshold_topk_np,
+)
+from repro.core.blocked import (
+    blocked_topk_batched_native,
+    chunked_ta_topk_batched_native,
+)
+from repro.core.engines import trace_detail
+from repro.core.index import build_index
+from repro.core.layout import build_list_major
+from repro.core.strategies import sign_bucket, sign_bucket_label
+from repro.core.threshold import threshold_topk_batched_from_index
+
+
+def _mixed_batch(rng, r):
+    """One batch spanning every sign bucket, with different stopping
+    depths (the sparse query deactivates half its lists and certifies
+    much earlier than the dense ones)."""
+    U = np.zeros((4, r), np.float32)
+    U[0] = np.abs(rng.standard_normal(r)) + 0.05      # nonneg dense
+    U[1] = -np.abs(rng.standard_normal(r)) - 0.05     # nonpos dense
+    U[2] = rng.standard_normal(r)                     # mixed
+    U[3] = np.abs(rng.standard_normal(r))
+    U[3, ::2] = 0.0                                   # nonneg sparse
+    return U
+
+
+def _ta_oracle(T, idx, U, k):
+    od = np.asarray(idx.order_desc)
+    vals, ns, dep = [], [], []
+    for u in U:
+        v, _, st = threshold_topk_np(T, od, u, k)
+        vals.append(v)
+        ns.append(st.n_scored)
+        dep.append(st.depth)
+    return np.asarray(vals), np.asarray(ns), np.asarray(dep)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole exactness: mixed batches, M = 2^n - 1 / 2^n / 2^n + 1,
+# prefix-hit AND prefix-overflow depths
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [255, 256, 257])
+@pytest.mark.parametrize("prefix_depth", [16, 300])  # overflow / hit
+def test_batched_ta_mixed_batch_matches_sequential_oracle(m, prefix_depth):
+    rng = np.random.default_rng(100 + m + prefix_depth)
+    r, k = 7, 5
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    ctx = EngineContext(T, prefix_depth=prefix_depth, ta_chunk=8,
+                        block_size=16)
+    U = _mixed_batch(rng, r)
+    assert sign_bucket(U) == (0, False)
+    res = get_engine("ta").run(ctx, jnp.asarray(U), k)
+    ref_v, ref_n, ref_d = _ta_oracle(T, ctx.index, U, k)
+    np.testing.assert_allclose(np.asarray(res.values), ref_v, atol=1e-4)
+    # count-faithfulness: the batch-level loop halts at the max live
+    # query's depth, but per-lane gating must keep every lane's counts
+    # EQUAL to its sequential run
+    np.testing.assert_array_equal(np.asarray(res.n_scored), ref_n)
+    np.testing.assert_array_equal(np.asarray(res.depth), ref_d)
+    assert len(set(ref_d.tolist())) > 1   # genuinely different depths
+
+
+@pytest.mark.parametrize("m", [255, 256, 257])
+@pytest.mark.parametrize("prefix_depth", [16, 300])
+def test_batched_bta_mixed_batch_exact_and_count_faithful(m, prefix_depth):
+    rng = np.random.default_rng(200 + m + prefix_depth)
+    r, k = 7, 5
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    ctx = EngineContext(T, prefix_depth=prefix_depth, ta_chunk=8,
+                        block_size=16)
+    U = _mixed_batch(rng, r)
+    res = get_engine("bta").run(ctx, jnp.asarray(U), k)
+    ref = naive_topk(jnp.asarray(T), jnp.asarray(U), k)
+    np.testing.assert_allclose(np.sort(np.asarray(res.values), axis=1),
+                               np.sort(np.asarray(ref.values), axis=1),
+                               atol=1e-4)
+    # BTA is block-granular: its counts are defined by the SEQUENTIAL
+    # per-query blocked scan, which the batched-native path must match
+    # lane for lane
+    args = ctx.engine_args(get_engine("bta"))
+    for b in range(U.shape[0]):
+        one = blocked_topk(args["targets"], args["order_desc"],
+                           args["t_sorted_desc"], jnp.asarray(U[b]), k,
+                           16, -1, rank_desc=args["rank_desc"],
+                           layout=args["layout"], m_real=args["m_real"])
+        assert int(res.n_scored[b]) == int(one.n_scored)
+        assert int(res.depth[b]) == int(one.depth)
+
+
+def test_batched_ta_single_sign_dense_batches():
+    # dense single-sign buckets take the shared-freshness fast path
+    # (query-independent keys) — must still match the sequential oracle
+    rng = np.random.default_rng(7)
+    m, r, k = 257, 6, 4
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    ctx = EngineContext(T, prefix_depth=64, ta_chunk=8, block_size=16)
+    for sgn in (1.0, -1.0):
+        U = sgn * (np.abs(rng.standard_normal((5, r))) + 0.01)
+        U = U.astype(np.float32)
+        assert sign_bucket(U)[0] == int(sgn)
+        res = get_engine("ta").run(ctx, jnp.asarray(U), k)
+        ref_v, ref_n, ref_d = _ta_oracle(T, ctx.index, U, k)
+        np.testing.assert_allclose(np.asarray(res.values), ref_v,
+                                   atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(res.n_scored), ref_n)
+        np.testing.assert_array_equal(np.asarray(res.depth), ref_d)
+
+
+# ---------------------------------------------------------------------------
+# Single-sided layouts (head-only / tail-only prefix tiles)
+# ---------------------------------------------------------------------------
+
+
+def test_sided_layouts_serve_their_sign_natively():
+    rng = np.random.default_rng(11)
+    m, r, k = 255, 6, 4
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    idx = build_index(T)
+    full = build_list_major(T, idx, prefix_depth=48)
+    head = build_list_major(T, idx, prefix_depth=48, sides=("head",))
+    tail = full.sided("tail")
+    assert full.two_sided and full.sides == ("head", "tail")
+    assert head.sides == ("head",) and tail.sides == ("tail",)
+    assert head.serves_sign(1) and not head.serves_sign(-1)
+    assert tail.serves_sign(-1) and not tail.serves_sign(0)
+
+    Tj = jnp.asarray(T)
+    U_pos = jnp.asarray(
+        np.abs(rng.standard_normal((4, r))).astype(np.float32) + 0.01)
+    U_neg = -U_pos
+    for lay, U, sign in ((head, U_pos, 1), (tail, U_neg, -1)):
+        res = blocked_topk_batched_native(
+            Tj, idx.order_desc, idx.t_sorted_desc, U, k,
+            block_size=16, layout=lay, sign=sign, dense=True)
+        ref = naive_topk(Tj, U, k)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.values), axis=1),
+            np.sort(np.asarray(ref.values), axis=1), atol=1e-4)
+        res_ta = chunked_ta_topk_batched_native(
+            Tj, idx.order_desc, idx.t_sorted_desc, U, k,
+            chunk=8, layout=lay, sign=sign, dense=True)
+        ref_v, ref_n, ref_d = _ta_oracle(T, idx, np.asarray(U), k)
+        np.testing.assert_allclose(np.asarray(res_ta.values), ref_v,
+                                   atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(res_ta.n_scored), ref_n)
+        np.testing.assert_array_equal(np.asarray(res_ta.depth), ref_d)
+
+
+def test_sided_layout_mismatch_raises_and_mixed_requires_two_sides():
+    rng = np.random.default_rng(13)
+    T = rng.standard_normal((255, 5)).astype(np.float32)
+    idx = build_index(T)
+    head = build_list_major(T, idx, prefix_depth=32, sides=("head",))
+    U = jnp.asarray(rng.standard_normal((2, 5)).astype(np.float32))
+    with pytest.raises(ValueError, match="serve"):
+        blocked_topk_batched_native(
+            jnp.asarray(T), idx.order_desc, idx.t_sorted_desc, U, 3,
+            block_size=16, layout=head, sign=0, dense=False)
+
+
+def test_threshold_batched_wrapper_routes_and_falls_back():
+    rng = np.random.default_rng(17)
+    m, r, k = 257, 6, 4
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    idx = build_index(T)
+    lay = build_list_major(T, idx, prefix_depth=64)
+    U = _mixed_batch(rng, r)
+    ref_v, ref_n, ref_d = _ta_oracle(T, idx, U, k)
+    for kw in (dict(chunk=8, layout=lay),    # batched-native route
+               dict()):                      # vmapped per-query fallback
+        res = threshold_topk_batched_from_index(
+            jnp.asarray(T), idx, jnp.asarray(U), k, **kw)
+        np.testing.assert_allclose(np.asarray(res.values), ref_v,
+                                   atol=1e-4)
+        np.testing.assert_array_equal(np.asarray(res.n_scored), ref_n)
+        np.testing.assert_array_equal(np.asarray(res.depth), ref_d)
+
+
+# ---------------------------------------------------------------------------
+# Sign buckets: host helper + compile-count accounting
+# ---------------------------------------------------------------------------
+
+
+def test_sign_bucket_helper():
+    assert sign_bucket(np.ones((2, 3))) == (1, True)
+    assert sign_bucket(-np.ones((2, 3))) == (-1, True)
+    assert sign_bucket(np.array([[1.0, -1.0]])) == (0, False)
+    assert sign_bucket(np.array([[1.0, 0.0]])) == (1, False)
+    assert sign_bucket(np.array([[-1.0, 0.0]])) == (-1, False)
+    assert sign_bucket(np.zeros((1, 2))) == (1, False)  # degenerate: head
+    assert sign_bucket_label(()) == "unbucketed"
+    assert sign_bucket_label((1, True)) == "nonneg-dense"
+    assert sign_bucket_label((-1, False)) == "nonpos-sparse"
+    assert sign_bucket_label((0, False)) == "mixed-sparse"
+
+
+def test_sign_bucket_compile_counts():
+    # process-unique shapes (R=23, k=7, M-bucket 1024, prefix 40): the
+    # argument-passing executors' trace cache is PROCESS-WIDE, so a
+    # signature another test compiled would attribute 0 traces here
+    rng = np.random.default_rng(23)
+    m, r, k = 705, 23, 7
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    ctx = EngineContext(T, prefix_depth=40, ta_chunk=8, block_size=16)
+    ctx.warmup(k, batch_sizes=(4,), engines=["ta", "bta"])
+    warm = dict(ctx.trace_counts)
+    # every warmed sign bucket serves with 0 retraces
+    dense = np.abs(rng.standard_normal((4, r))).astype(np.float32) + 0.01
+    mixed = rng.standard_normal((4, r)).astype(np.float32)
+    sparse = dense.copy()
+    sparse[:, ::2] = 0.0
+    for U in (dense, -dense, mixed, sparse):
+        for name in ("ta", "bta"):
+            get_engine(name).run(ctx, jnp.asarray(U), k)
+    assert ctx.trace_counts == warm
+    # the one unwarmed bucket (nonpos-sparse) pays exactly one trace per
+    # engine, attributed to the right (engine, bucket) key
+    before = trace_detail()
+    for name in ("ta", "bta"):
+        res = get_engine(name).run(ctx, jnp.asarray(-sparse), k)
+        ref = naive_topk(jnp.asarray(T), jnp.asarray(-sparse), k)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.values), axis=1),
+            np.sort(np.asarray(ref.values), axis=1), atol=1e-4)
+    after = trace_detail()
+    for name in ("ta", "bta"):
+        key = (name, (-1, False))
+        assert after.get(key, 0) - before.get(key, 0) == 1
+        assert ctx.trace_counts[name] == warm[name] + 1
+    # and re-serving the now-warm bucket adds nothing
+    snap = dict(ctx.trace_counts)
+    for name in ("ta", "bta"):
+        get_engine(name).run(ctx, jnp.asarray(-sparse), k)
+    assert ctx.trace_counts == snap
+
+
+def test_compaction_compile_free_with_sign_buckets():
+    """DESIGN.md §11 acceptance: `engine_compiles_per_compaction` stays 0
+    with the sign-specialised variants enabled (list layout ON)."""
+    from repro.core.segments import SegmentedCatalogue
+
+    rng = np.random.default_rng(29)
+    m, r, k = 420, 27, 5           # process-unique executor signatures
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    cat = SegmentedCatalogue(T, delta_capacity=32, prefix_depth=48,
+                             ta_chunk=8, block_size=16)
+    # boot warmup: plain-k engine executables (all sign buckets) + the
+    # segmented tails / escalated shape
+    cat.snapshot.ctx.warmup(k, batch_sizes=(4,), engines=["ta", "bta"])
+    cat.warm(k, batch_sizes=(4,), engines=["ta", "bta"])
+    cat.set_warm_spec(k, (4,), engines=["ta", "bta"], headroom=False)
+    # every common sign bucket is warmed on the boot snapshot
+    assert {nm for (nm, bc) in trace_detail() if bc == (-1, True)} \
+        >= {"ta", "bta"}
+    # overflow the delta so at least one compaction (same M-bucket) runs
+    for _ in range(3):
+        cat.add_targets(rng.standard_normal((20, r)).astype(np.float32))
+    cat.flush()
+    assert cat.stats.n_compactions >= 1
+    assert cat.stats.engine_compiles_total == 0
+    # post-compaction serving in every warmed bucket: still 0 retraces
+    snap_counts = dict(cat.snapshot.ctx.trace_counts)
+    U = np.abs(rng.standard_normal((4, r))).astype(np.float32) + 0.01
+    for q in (U, -U, rng.standard_normal((4, r)).astype(np.float32)):
+        for name in ("ta", "bta"):
+            get_engine(name).run(cat.snapshot.ctx, jnp.asarray(q), k)
+    assert cat.snapshot.ctx.trace_counts == snap_counts

@@ -48,10 +48,27 @@ def test_engines_sweep_smoke():
     assert rows, "sweep produced no rows"
     bad = [r["engine"] for r in rows if r["exact"] and not r["exact_verified"]]
     assert not bad, f"exact engines diverged from naive: {bad}"
-    required = {"engine", "resolved", "backend", "M", "avg_scores",
-                "us_per_query", "speedup_vs_naive", "interpret_mode",
-                "exact_verified"}
+    required = {"engine", "resolved", "backend", "M", "batch", "sign",
+                "sign_bucket", "traces_by_sign", "avg_scores",
+                "us_per_query", "queries_per_s", "speedup_vs_naive",
+                "interpret_mode", "exact_verified"}
     assert all(required <= set(r) for r in rows)
+    # the B x sign grid is present: all three batch sizes, both sign
+    # axes for the list engines, and the quick sweep forces the list
+    # layout ON so the batched sign-specialised path is what ran
+    assert {r["batch"] for r in rows} == {1, 8, 64}
+    ta_rows = [r for r in rows if r["engine"] == "ta"]
+    assert {r["sign"] for r in ta_rows} == {"mixed", "nonneg"}
+    assert all(r["prefix_depth"] == engines.QUICK_PREFIX_DEPTH
+               for r in ta_rows)
+    assert all(r["sign_bucket"] == ("mixed-sparse" if r["sign"] == "mixed"
+                                    else "nonneg-dense")
+               for r in ta_rows)
+    # warmed sign buckets compiled exactly once each (process-wide
+    # counters: >= 1 guards against double-traces without being brittle
+    # to other tests sharing the executor cache)
+    for r in ta_rows:
+        assert r["traces_by_sign"].get(r["sign_bucket"], 0) >= 1
     # pallas rows off-TPU must be flagged as interpreter time
     import jax
     if jax.default_backend() != "tpu":

@@ -143,10 +143,34 @@ def test_auto_selects_norm_backend_for_decaying_catalogues():
 
 
 def test_auto_selects_bta_for_dense_flat_catalogues():
+    # B-aware policy (DESIGN.md §11): BTA needs BOTH a flat spectrum and
+    # a batch big enough to amortise the batched-native list scan
     rng = np.random.default_rng(2)
-    ctx = EngineContext(rng.standard_normal((1000, 16)).astype(np.float32))
-    U = jnp.asarray(rng.standard_normal((4, 16)).astype(np.float32))
+    ctx = EngineContext(rng.standard_normal((1000, 16)).astype(np.float32),
+                        prefix_depth=64)
+    U = jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32))
     assert select_engine(ctx, U).name == "bta"
+    # below the amortisation threshold the shared-tile norm scan wins
+    assert select_engine(ctx, U[:2]).name in ("norm", "pallas")
+    # with the list layout off there is no batched path at any B: the
+    # per-query list loop never beats the contiguous norm scan
+    ctx_off = EngineContext(
+        rng.standard_normal((1000, 16)).astype(np.float32), prefix_depth=0)
+    assert select_engine(ctx_off, U).name in ("norm", "pallas")
+
+
+def test_auto_sparse_small_batch_avoids_lockstep_list_scan():
+    # sparse queries still pick TA when the batched path is live (B >= 8)
+    # or when the layout is off (cache-resident gather path); a SMALL
+    # batch with the layout on would pay the per-query lockstep loop, so
+    # the policy falls through to the norm scan
+    rng = np.random.default_rng(3)
+    U = np.zeros((8, 24), np.float32)
+    U[:, :3] = 1.0
+    ctx = EngineContext(rng.standard_normal((500, 24)).astype(np.float32),
+                        prefix_depth=64)
+    assert select_engine(ctx, jnp.asarray(U)).name == "ta"
+    assert select_engine(ctx, jnp.asarray(U[:2])).name in ("norm", "pallas")
 
 
 # ---------------------------------------------------------------------------
