@@ -20,7 +20,7 @@ def run(quick: bool = True):
     idx = build_index(TOY_T)
     order = np.asarray(idx.order_desc)
 
-    (nv, ni, _, _), t_naive = timed(
+    (nv, ni, *_), t_naive = timed(
         lambda: naive_topk(jnp.asarray(TOY_T), jnp.asarray(TOY_U), 1))
     tv, ti, ts = threshold_topk_np(TOY_T, order, TOY_U, 1)
     fv, fi, fs = fagin_topk_np(TOY_T, order, TOY_U, 1)

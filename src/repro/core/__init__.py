@@ -55,7 +55,9 @@ from repro.core.layout import (
     build_layout,
     layout_names,
 )
-from repro.core.naive import TopKResult, naive_topk
+from repro.core import faults
+from repro.core.naive import (TopKResult, certificate_gaps,
+                              certified_counts, naive_topk)
 from repro.core.segments import (
     DEFAULT_DELTA_CAPACITY,
     DeltaSegment,
@@ -122,4 +124,6 @@ __all__ = [
     # streaming catalogue subsystem
     "SegmentedCatalogue", "Snapshot", "DeltaSegment", "QueryInfo",
     "SegmentStats", "delta_bucket", "DEFAULT_DELTA_CAPACITY",
+    # robustness layer (DESIGN.md §12)
+    "certificate_gaps", "certified_counts", "faults",
 ]

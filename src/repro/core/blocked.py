@@ -485,11 +485,17 @@ def norm_pruned_topk_batched(
             jnp.full((B,), jnp.inf, targets_by_norm.dtype))
     if cap >= 1:
         init = body(init)       # block 0 is unconditionally live: unroll
-    _, top_vals, top_ids, n_scored, depth, _, _ = jax.lax.while_loop(
+    _, top_vals, top_ids, n_scored, depth, _, upper = jax.lax.while_loop(
         cond, body, init)
     ids = jnp.where(top_ids >= 0,
                     norm_order[jnp.clip(top_ids, 0, M - 1)], -1)
-    return TopKResult(top_vals, ids, n_scored, depth * block_size)
+    # certificate tightening (as in the shared driver): a lane that
+    # consumed every REAL block has nothing un-enumerated — vacuous -inf
+    # bound; only a budget halt keeps the live block bound
+    full_steps = -(-m // block_size)
+    upper = jnp.where(depth >= full_steps, neg_inf, upper)
+    return TopKResult(top_vals, ids, n_scored, depth * block_size,
+                      upper=upper)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block_size", "max_blocks"))

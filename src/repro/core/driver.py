@@ -423,7 +423,26 @@ def pruned_block_scan(
             init = body(init)
     final = jax.lax.while_loop(cond, body, init)
     depth = final.rounds if chunk > 1 else final.step
-    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
+    # Certificate tightening: when the scan consumed every REAL block
+    # (not a budget halt — the full, pad-aware step/round count), no item
+    # is left un-enumerated and the vacuous bound -inf replaces the last
+    # block bound, which only speaks for items BEYOND the blocks scanned.
+    # Exact-but-unpruned scans (tiny M, k ~ M) then certify fully.
+    if chunk > 1:
+        full_rounds = (strategy.num_rounds_dynamic
+                       if strategy.num_rounds_dynamic is not None
+                       else total_rounds)
+        exhausted = final.rounds >= full_rounds
+    else:
+        full_steps = (strategy.num_steps_dynamic
+                      if strategy.num_steps_dynamic is not None
+                      else strategy.num_steps)
+        exhausted = final.step >= full_steps
+    upper = jnp.where(exhausted,
+                      jnp.asarray(NEG_INF, dtype=final.upper.dtype),
+                      final.upper)
+    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth,
+                     upper=upper)
     return (res, final) if return_state else res
 
 
@@ -600,5 +619,23 @@ def batched_pruned_scan(
         init = body(init)
     final = jax.lax.while_loop(cond, body, init)
     depth = final.rounds if chunk > 1 else final.steps
-    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth)
+    # Same certificate tightening as the per-query driver: a lane whose
+    # scan consumed every REAL block/round has nothing un-enumerated —
+    # its upper drops to the vacuous -inf (a budget halt keeps the live
+    # block bound; per-lane because frozen lanes stop at their own depth)
+    if chunk > 1:
+        full_rounds = (strategy.num_rounds_dynamic
+                       if strategy.num_rounds_dynamic is not None
+                       else total_rounds)
+        exhausted = final.rounds >= full_rounds
+    else:
+        full_steps = (strategy.num_steps_dynamic
+                      if strategy.num_steps_dynamic is not None
+                      else strategy.num_steps)
+        exhausted = final.steps >= full_steps
+    upper = jnp.where(exhausted,
+                      jnp.asarray(NEG_INF, dtype=final.upper.dtype),
+                      final.upper)
+    res = TopKResult(final.top_vals, final.top_ids, final.n_scored, depth,
+                     upper=upper)
     return (res, final) if return_state else res

@@ -191,11 +191,13 @@ def trace_detail() -> Dict[Tuple[str, tuple], int]:
 #: ``(args, U, *, k, cfg) -> TopKResult``. ONE executor per engine for
 #: the whole process: jax's own trace cache (keyed by arg shapes/dtypes/
 #: treedefs + the static ``k``/``cfg``) IS the compile cache, which is
-#: what makes it snapshot- and context-free. ``cfg`` is the nested pair
-#: ``(arg_config(ctx), batch_config(ctx, U))`` — the second component is
-#: the per-BATCH static bucket (the sign bucket for the list engines,
-#: DESIGN.md §11), which is how sign-specialised variants join the
-#: compile key without touching the snapshot-free arguments.
+#: what makes it snapshot- and context-free. ``cfg`` is the triple
+#: ``(arg_config(ctx), batch_config(ctx, U), budget)`` — the second
+#: component is the per-BATCH static bucket (the sign bucket for the
+#: list engines, DESIGN.md §11), the third the per-query halting budget
+#: (``None`` = run to exactness, DESIGN.md §12). Both join the compile
+#: key without touching the snapshot-free arguments — budgeted variants
+#: stay compile-free across compactions just like exact ones.
 _ARG_EXECUTORS: Dict[str, Callable] = {}
 
 
@@ -437,23 +439,27 @@ class EngineContext:
         return args
 
     def _dispatch_args(self, engine: "Engine", args, U: Array,
-                      k: int) -> TopKResult:
+                      k: int, budget: Optional[int] = None) -> TopKResult:
         """Run the shared executor, attributing any trace to this context.
 
-        The static cfg is the nested pair ``(arg_config(ctx),
-        batch_config(ctx, U))``: the second component — the batch's sign
-        bucket for the list engines — is computed host-side per dispatch
-        (one ``np.asarray`` read of the query VALUES; for device-resident
-        batches that is a transfer of an input, never a sync on pending
-        device work) and joins the compile key, selecting the
-        sign-specialised trace (DESIGN.md §11)."""
+        The static cfg is the triple ``(arg_config(ctx),
+        batch_config(ctx, U), budget)``: the second component — the
+        batch's sign bucket for the list engines — is computed host-side
+        per dispatch (one ``np.asarray`` read of the query VALUES; for
+        device-resident batches that is a transfer of an input, never a
+        sync on pending device work) and joins the compile key, selecting
+        the sign-specialised trace (DESIGN.md §11). ``budget`` (list-depth
+        rows; ``None`` = exact) is the third static component — budgeted
+        variants are ordinary compile-key entries, carrying no snapshot
+        identity (DESIGN.md §12)."""
         acfg = engine.arg_config(self) if engine.arg_config is not None \
             else ()
         bcfg = engine.batch_config(self, U) \
             if engine.batch_config is not None else ()
         fn = _ARG_EXECUTORS[engine.name]
         before = _TRACE_TOTALS.get(engine.name, 0)
-        res = fn(args, U, k=int(k), cfg=(acfg, bcfg))
+        bud = None if budget is None else int(budget)
+        res = fn(args, U, k=int(k), cfg=(acfg, bcfg, bud))
         delta = _TRACE_TOTALS.get(engine.name, 0) - before
         if delta:
             self.trace_counts[engine.name] = (
@@ -500,13 +506,16 @@ class EngineContext:
             self._compiled[key] = fn
         return fn
 
-    def run_engine(self, engine: "Engine", U: Array, k: int) -> TopKResult:
+    def run_engine(self, engine: "Engine", U: Array, k: int,
+                   budget: Optional[int] = None) -> TopKResult:
         """Bucket the batch, pad, run the cached executable, slice back.
 
         Padding repeats the LAST query row (never zeros: an all-zero query
         deactivates every list and would drag a vmapped lockstep scan to
         its worst case); padded rows are dropped before returning, so
-        per-query statistics are untouched.
+        per-query statistics are untouched. ``budget`` (list-depth rows)
+        selects the halted certified variant (DESIGN.md §12); only
+        argument-passing engines support it.
         """
         if not (isinstance(U, jax.Array) and U.ndim == 2
                 and U.dtype == self.targets.dtype):
@@ -517,8 +526,12 @@ class EngineContext:
             U = pad_to_bucket(U)
         if engine.run_args is not None:
             res = self._dispatch_args(engine, self.engine_args(engine),
-                                      U, k)
+                                      U, k, budget=budget)
         else:
+            if budget is not None:
+                raise ValueError(
+                    f"engine {engine.name!r} is closure-compiled and does "
+                    "not support budgeted queries")
             res = self.compiled(engine, k, bucket)(U)
         if bucket != b:
             res = jax.tree_util.tree_map(lambda a: a[:b], res)
@@ -526,7 +539,7 @@ class EngineContext:
 
     def warmup(self, k: int, batch_sizes=(1, 8, 64),
                engines: Optional[List[str]] = None,
-               m_buckets=None) -> "EngineContext":
+               m_buckets=None, budgets=None) -> "EngineContext":
         """Compile (engine, k, batch-bucket, M-bucket) executables ahead
         of traffic.
 
@@ -546,7 +559,15 @@ class EngineContext:
         nonneg-dense, nonpos-dense, mixed, and nonneg-sparse (the bucket
         ``auto``'s sparse→TA route produces) — so serving any of those
         buckets adds 0 retraces; the rare nonpos-sparse bucket pays its
-        one trace lazily. Returns self for chaining.
+        one trace lazily.
+
+        ``budgets`` optionally lists halting budgets (list-depth rows) to
+        warm BESIDES the exact ``None`` variant: each budget is one more
+        static cfg entry per (engine, batch, sign) combination, so a
+        server that degrades to budgeted certified scans under load never
+        compiles on the hot path — and, like every other argument-passing
+        variant, the budgeted traces survive compaction (DESIGN.md §12).
+        Returns self for chaining.
         """
         names = list(engines) if engines is not None else [
             e.name for e in list_engines() if e.has_executable]
@@ -556,16 +577,20 @@ class EngineContext:
             buckets_m = [own]
         else:
             buckets_m = sorted({max(int(x), own) for x in m_buckets})
+        budget_list = [None] + [int(x) for x in (budgets or ())]
         for name in names:
             eng = get_engine(name)
             if eng.run_args is not None:
+                buds = budget_list if eng.supports_budget else [None]
                 for mb in buckets_m:
                     args = self.engine_args(eng, mb, cache=(mb == own))
                     for b in batch_sizes:
                         bucket = batch_bucket(b)
                         for U in self._warm_batches(eng, bucket, r):
-                            res = self._dispatch_args(eng, args, U, k)
-                            jax.block_until_ready(res.values)
+                            for bud in buds:
+                                res = self._dispatch_args(eng, args, U, k,
+                                                          budget=bud)
+                                jax.block_until_ready(res.values)
             else:
                 for b in batch_sizes:
                     bucket = batch_bucket(b)
@@ -638,6 +663,10 @@ class Engine:
     exact: bool = True
     needs_index: bool = True
     supports_batch: bool = True
+    #: True for engines that honour ``run(..., budget=)`` — a list-depth
+    #: halting budget joining the executor compile key, with the halted
+    #: result carrying a per-item certificate bound (DESIGN.md §12).
+    supports_budget: bool = False
     backend: str = "jax"
     layout: Optional[str] = None
     host_only: bool = False
@@ -651,10 +680,18 @@ class Engine:
         the dispatch pseudo-engines and the host oracles)."""
         return self.run_args is not None or self.make_batched is not None
 
-    def run(self, ctx: EngineContext, U: Array, k: int) -> TopKResult:
+    def run(self, ctx: EngineContext, U: Array, k: int,
+            budget: Optional[int] = None) -> TopKResult:
+        if budget is not None and not self.supports_budget:
+            raise ValueError(
+                f"engine {self.name!r} does not support budgeted queries; "
+                "use one of "
+                f"{[e.name for e in list_engines() if e.supports_budget]}")
         if self.dispatch is not None:
+            if budget is not None:
+                return self.dispatch(ctx, U, k, budget)
             return self.dispatch(ctx, U, k)
-        return ctx.run_engine(self, U, k)
+        return ctx.run_engine(self, U, k, budget=budget)
 
 
 _REGISTRY: Dict[str, Engine] = {}
@@ -723,9 +760,12 @@ def _naive_run(args, U, k, cfg):
     vals, ids = jax.lax.top_k(scores, min(k, mb))
     ids = jnp.where(jnp.isneginf(vals), -1, ids)
     b = U.shape[0]
+    # a full scan leaves nothing unenumerated: the bound on unseen items
+    # is vacuous (-inf), so every returned slot is certified
     return TopKResult(vals, ids,
                       jnp.broadcast_to(m, (b,)).astype(jnp.int32),
-                      jnp.zeros((b,), jnp.int32))
+                      jnp.zeros((b,), jnp.int32),
+                      upper=jnp.full((b,), NEG_INF, vals.dtype))
 
 
 def _list_layout(ctx: EngineContext):
@@ -775,7 +815,10 @@ def _ta_run(args, U, k, cfg):
     # layout the rounds inside the prefix are gather-free (DESIGN.md §7),
     # and a sign-bucketed batch takes the batched-native prefix scan —
     # ONE shared tile enumeration for the whole batch (DESIGN.md §11).
-    (chunk, max_rounds, tail_pallas), bcfg = cfg
+    # TA's round unit IS list depth, so a budget caps rounds directly.
+    (chunk, max_rounds, tail_pallas), bcfg, budget = cfg
+    if budget is not None:
+        max_rounds = budget if max_rounds < 0 else min(max_rounds, budget)
     lay = args["layout"]
 
     if bcfg and lay is not None and lay.serves_sign(bcfg[0]) \
@@ -807,7 +850,11 @@ def _bta_cfg(ctx: EngineContext) -> tuple:
 
 
 def _bta_run(args, U, k, cfg):
-    (block_size, max_blocks, tail_pallas), bcfg = cfg
+    (block_size, max_blocks, tail_pallas), bcfg, budget = cfg
+    if budget is not None:
+        # budget is list-depth rows; BTA halts at block granularity
+        bb = max(1, -(-budget // block_size))
+        max_blocks = bb if max_blocks < 0 else min(max_blocks, bb)
     lay = args["layout"]
 
     if bcfg and lay is not None and lay.serves_sign(bcfg[0]) \
@@ -858,7 +905,11 @@ def _norm_cfg(ctx: EngineContext) -> tuple:
 
 
 def _norm_run(args, U, k, cfg):
-    (block_size, max_blocks), _ = cfg
+    (block_size, max_blocks), _, budget = cfg
+    if budget is not None:
+        # budget is rows enumerated in norm order, i.e. blocks * block
+        bb = max(1, -(-budget // block_size))
+        max_blocks = bb if max_blocks < 0 else min(max_blocks, bb)
     mb = args["targets_by_norm"].shape[0]
     # batched-native scan: every query walks the SAME norm-ordered
     # prefix, so one shared tile slice + one [B,R]@[R,block] matmul
@@ -888,7 +939,8 @@ def _norm_sharded_cfg(ctx: EngineContext) -> tuple:
 
 def _norm_sharded_run(args, U, k, cfg):
     from repro.core.sharded import sharded_norm_topk
-    (block_size, max_blocks, mesh), _ = cfg
+    # budget unsupported (supports_budget=False): cfg[2] is always None
+    (block_size, max_blocks, mesh), _, _ = cfg
     scan = sharded_norm_topk(mesh, ("data",))
     return scan(args["targets_sharded"], args["norms_sharded"],
                 args["ids_sharded"], U, k, block_size, max_blocks)
@@ -902,7 +954,12 @@ def _pallas_batched(ctx: EngineContext, k: int):
     def fn(U):
         vals, ids, stats = cat.query_batch(U, k, interpret=interpret)
         # stats = (rows scored incl. block padding, blocks visited, loaded)
-        return TopKResult(vals, ids, stats[:, 0], stats[:, 1] * block_m)
+        # exact kernel: vacuous -inf bound => fully certified result, and
+        # the pytree structure matches the argument-passing engines so
+        # mixed-engine chunk results concatenate cleanly
+        return TopKResult(vals, ids, stats[:, 0], stats[:, 1] * block_m,
+                          upper=jnp.full((U.shape[0],), NEG_INF,
+                                         vals.dtype))
 
     return fn
 
@@ -968,8 +1025,14 @@ def auto_candidates():
             "pallas" if jax.default_backend() == "tpu" else "norm"]
 
 
-def _auto_dispatch(ctx: EngineContext, U, k: int) -> TopKResult:
-    return select_engine(ctx, U).run(ctx, U, k)
+def _auto_dispatch(ctx: EngineContext, U, k: int,
+                   budget: Optional[int] = None) -> TopKResult:
+    eng = select_engine(ctx, U)
+    if budget is not None and not eng.supports_budget:
+        # every budget-capable fallback walks the same contiguous norm
+        # order, so it is the natural degraded target (DESIGN.md §12)
+        eng = get_engine("norm")
+    return eng.run(ctx, U, k, budget=budget)
 
 
 # ---------------------------------------------------------------------------
@@ -995,7 +1058,9 @@ def _host_oracle_dispatch(one_query):
             ids[b, :len(i)] = i
             ns[b], dep[b] = n, d
         return TopKResult(jnp.asarray(vals), jnp.asarray(ids),
-                          jnp.asarray(ns), jnp.asarray(dep))
+                          jnp.asarray(ns), jnp.asarray(dep),
+                          upper=jnp.full((U_np.shape[0],), float("-inf"),
+                                         jnp.float32))
 
     return dispatch
 
@@ -1069,14 +1134,16 @@ def _host_traffic(ctx, res):
 register_engine(Engine(
     name="naive", make_args=_naive_args, run_args=_naive_run,
     exact=True, needs_index=False,
-    supports_batch=True, backend="jax", layout="row_major",
+    supports_batch=True, supports_budget=True,  # budget ignored: one matmul
+    backend="jax", layout="row_major",
     traffic=_naive_traffic,
     description="full matmul + lax.top_k (strongest wall-clock baseline)"))
 register_engine(Engine(
     name="ta", make_args=_list_args, run_args=_ta_run, arg_config=_ta_cfg,
     batch_config=_list_batch_cfg,
     exact=True, needs_index=True,
-    supports_batch=True, backend="jax", layout="list_major",
+    supports_batch=True, supports_budget=True, backend="jax",
+    layout="list_major",
     traffic=_list_traffic,
     description="Threshold Algorithm rounds (paper Alg. 2; chunked "
                 "execution, sequential-round accounting, batched-native "
@@ -1085,14 +1152,16 @@ register_engine(Engine(
     name="bta", make_args=_list_args, run_args=_bta_run,
     arg_config=_bta_cfg, batch_config=_list_batch_cfg,
     exact=True, needs_index=True,
-    supports_batch=True, backend="jax", layout="list_major",
+    supports_batch=True, supports_budget=True, backend="jax",
+    layout="list_major",
     traffic=_list_traffic,
     description="Block Threshold Algorithm (MXU-shaped TA, batched-native "
                 "sign-specialised list-prefix tiles)"))
 register_engine(Engine(
     name="norm", make_args=_norm_args, run_args=_norm_run,
     arg_config=_norm_cfg, exact=True, needs_index=True,
-    supports_batch=True, backend="jax", layout="norm_major",
+    supports_batch=True, supports_budget=True, backend="jax",
+    layout="norm_major",
     traffic=_norm_traffic,
     description="Cauchy-Schwarz norm-ordered block scan"))
 register_engine(Engine(
@@ -1124,6 +1193,6 @@ register_engine(Engine(
                 "host-only numpy reference, no jit)"))
 register_engine(Engine(
     name="auto", dispatch=_auto_dispatch, exact=True, needs_index=True,
-    supports_batch=True, backend="dispatch",
+    supports_batch=True, supports_budget=True, backend="dispatch",
     description="per-batch pick from host-side nnz(u) + catalogue norm "
                 "spectrum"))

@@ -78,12 +78,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults
 from repro.core.driver import NEG_INF, merge_block_into_carry_batched
 from repro.core.engines import (Engine, EngineContext, batch_bucket,
                                 pad_to_bucket)
 from repro.core.naive import TopKResult
 
 Array = jnp.ndarray
+
+# Named fault points (DESIGN.md §12): no-ops until a test arms them via
+# repro.core.faults. The seams cover exactly the failure modes the
+# recovery logic below exists for.
+FAULT_BUILD = faults.register_point(
+    "compaction.build",
+    "raise inside the compaction builder before the snapshot swap")
+FAULT_STALL = faults.register_point(
+    "compaction.stall",
+    "sleep inside the compaction builder (slow/stuck build)")
+FAULT_WARM = faults.register_point(
+    "compaction.warm",
+    "raise during the post-build readiness warmup")
+FAULT_DELTA_OVERFLOW = faults.register_point(
+    "delta.overflow",
+    "report the active delta as full on an append (mutation burst)")
 
 #: Default delta-buffer capacity (rows). Power of two; a full delta
 #: triggers compaction. 256 keeps warmup to 9 tail buckets while giving
@@ -184,6 +201,14 @@ class SegmentStats:
     headroom_compiles_total: int = 0
     compaction_s_total: float = 0.0
     last_compaction_s: float = 0.0
+    # recovery counters (DESIGN.md §12): build attempts launched while
+    # recovering from a failure, sync compactions forced by the L0 chain
+    # cap, watchdog detections of a stuck build thread, and the longest
+    # sealed-segment chain ever observed
+    n_build_retries: int = 0
+    n_forced_sync_compactions: int = 0
+    n_stuck_builds: int = 0
+    max_l0_chain: int = 0
 
 
 class Snapshot:
@@ -366,6 +391,20 @@ class SegmentedCatalogue:
       compact_async: build replacement snapshots on a background thread
         (queries keep serving base + frozen delta + active delta until
         the swap). Synchronous by default — deterministic for tests.
+      max_l0_segments: cap on the sealed-segment (L0) chain. Mutations
+        that would grow the chain past it force a SYNCHRONOUS compaction
+        (blocking that mutation call) instead of letting query latency
+        degrade unboundedly under sustained build failure
+        (DESIGN.md §12).
+      build_retry_limit: consecutive failed builds after which automatic
+        retries stop (an explicit :meth:`compact` or the chain cap still
+        force attempts).
+      build_backoff_s: initial retry backoff after a failed build,
+        doubling per consecutive failure up to ``build_backoff_max_s``.
+      build_watchdog_s: a background build older than this is flagged as
+        STUCK (``SegmentStats.n_stuck_builds``) by the watchdog check
+        that runs on query/mutation entry. Detection only — the build
+        thread is never killed (it may still finish and swap in).
       ctx_kwargs: forwarded to every :class:`EngineContext` this
         catalogue builds (``block_size``, ``prefix_depth``, ...).
     """
@@ -375,7 +414,13 @@ class SegmentedCatalogue:
                  DEFAULT_TOMBSTONE_COMPACT_FRACTION,
                  max_tombstones: Optional[int] = DEFAULT_MAX_TOMBSTONES,
                  overfetch_reserve: int = DEFAULT_OVERFETCH_RESERVE,
-                 compact_async: bool = False, **ctx_kwargs):
+                 compact_async: bool = False,
+                 max_l0_segments: int = 4,
+                 build_retry_limit: int = 3,
+                 build_backoff_s: float = 0.05,
+                 build_backoff_max_s: float = 2.0,
+                 build_watchdog_s: float = 30.0,
+                 auto_retry: bool = False, **ctx_kwargs):
         T = np.ascontiguousarray(np.asarray(targets, np.float32))
         self.rank = int(T.shape[1])
         self.delta_capacity = batch_bucket(max(int(delta_capacity), 1))
@@ -385,6 +430,18 @@ class SegmentedCatalogue:
         self.max_tombstones = int(max_tombstones)
         self.overfetch_reserve = batch_bucket(max(int(overfetch_reserve), 1))
         self.compact_async = bool(compact_async)
+        self.max_l0_segments = max(int(max_l0_segments), 1)
+        self.build_retry_limit = max(int(build_retry_limit), 0)
+        self.build_backoff_s = float(build_backoff_s)
+        self.build_backoff_max_s = float(build_backoff_max_s)
+        self.build_watchdog_s = float(build_watchdog_s)
+        # auto_retry=True makes a FAILED async build schedule its own
+        # timed retry (backoff-spaced, bounded by build_retry_limit), so
+        # a quiet catalogue heals without waiting for the next mutation.
+        # Off by default: retries then ride the next compaction trigger,
+        # preserving the legacy "flush() after a failure is passive"
+        # semantics tests rely on.
+        self.auto_retry = bool(auto_retry)
         self._ctx_kwargs = dict(ctx_kwargs)
         self._lock = threading.RLock()
         self._snapshot = Snapshot(
@@ -402,6 +459,13 @@ class SegmentedCatalogue:
         self.trace_counts: Dict[str, int] = {}
         self.stats = SegmentStats()
         self.last_build_error: Optional[BaseException] = None
+        # build-failure recovery state machine (DESIGN.md §12)
+        self._consec_build_failures = 0
+        self._retry_not_before = 0.0          # monotonic deadline (backoff)
+        self._last_backoff_s = 0.0
+        self._retry_timer: Optional[threading.Timer] = None
+        self._build_started_at: Optional[float] = None
+        self._watchdog_flagged = False
         self._warm_spec: Optional[tuple] = None
         # highest M-bucket any warmup has traced (DESIGN.md §10): the
         # headroom-renewal memo, so the pre-pay happens once per doubling
@@ -445,6 +509,50 @@ class SegmentedCatalogue:
         with self._lock:
             return (self._snapshot.identity and self._snapshot.n_dead == 0
                     and not self._frozen and self._delta.count == 0)
+
+    @property
+    def l0_chain_len(self) -> int:
+        """Sealed segments currently awaiting compaction."""
+        with self._lock:
+            return len(self._frozen)
+
+    @property
+    def consecutive_build_failures(self) -> int:
+        with self._lock:
+            return self._consec_build_failures
+
+    @property
+    def current_backoff_s(self) -> float:
+        """The backoff the NEXT automatic retry is waiting out (0 when
+        the last build succeeded)."""
+        with self._lock:
+            return self._last_backoff_s if self._consec_build_failures \
+                else 0.0
+
+    @property
+    def retry_pending(self) -> bool:
+        """True while an automatic post-failure retry is scheduled."""
+        with self._lock:
+            return self._retry_timer is not None
+
+    def check_watchdog(self) -> bool:
+        """Flag (once per build) an in-flight build exceeding the
+        watchdog threshold. Returns True while the build is overdue.
+
+        Detection only: the thread is never killed — a stalled build may
+        still finish and swap in; the counter tells the operator that
+        queries are meanwhile dragging an L0 chain.
+        """
+        with self._lock:
+            started = self._build_started_at
+            if self._build_thread is None or started is None:
+                return False
+            if time.monotonic() - started <= self.build_watchdog_s:
+                return False
+            if not self._watchdog_flagged:
+                self._watchdog_flagged = True
+                self.stats.n_stuck_builds += 1
+            return True
 
     def _live_concat_locked(self, snap: Snapshot, segs
                             ) -> Tuple[np.ndarray, np.ndarray]:
@@ -511,15 +619,34 @@ class SegmentedCatalogue:
         self.stats.max_delta_occupancy = max(
             self.stats.max_delta_occupancy, self._delta.count)
 
-    def add_targets(self, rows) -> np.ndarray:
-        """Append rows; returns their freshly assigned global ids."""
+    def _validate_rows(self, rows, what: str) -> np.ndarray:
+        """Shared mutation-input validation: shape, rank, finiteness.
+
+        A NaN/Inf row would poison every score it participates in (NaN
+        propagates through the matmul and breaks the sort), so it is
+        rejected up front with a clear error instead of producing silent
+        garbage downstream.
+        """
         R = np.atleast_2d(np.asarray(rows, np.float32))
+        if R.ndim != 2:
+            raise ValueError(
+                f"{what} must be [R] or [N, R], got shape {R.shape}")
         if R.shape[1] != self.rank:
             raise ValueError(f"rank mismatch: {R.shape[1]} != {self.rank}")
+        if not np.all(np.isfinite(R)):
+            bad = int(np.flatnonzero(~np.all(np.isfinite(R), axis=1))[0])
+            raise ValueError(
+                f"{what} contain non-finite values (first bad row: {bad}); "
+                "NaN/Inf rows would corrupt every top-K they score in")
+        return R
+
+    def add_targets(self, rows) -> np.ndarray:
+        """Append rows; returns their freshly assigned global ids."""
+        R = self._validate_rows(rows, "inserted rows")
         out = np.empty((R.shape[0],), np.int64)
         with self._lock:
             for i, row in enumerate(R):
-                if self._delta.full:
+                if self._delta.full or faults.fire(FAULT_DELTA_OVERFLOW):
                     self._compact_locked()
                 gid = self._next_gid
                 self._next_gid += 1
@@ -527,6 +654,7 @@ class SegmentedCatalogue:
                 self._note_delta_peak()
                 out[i] = gid
             self.stats.n_inserts += R.shape[0]
+        self._after_mutation()
         return out
 
     def delete_targets(self, gids) -> None:
@@ -544,6 +672,7 @@ class SegmentedCatalogue:
             self._kill_located(located)
             self.stats.n_deletes += len(gids)
             self._maybe_compact_locked()
+        self._after_mutation()
 
     def update_targets(self, gids, rows) -> None:
         """Replace live items in place: tombstone the old row, append the
@@ -552,11 +681,9 @@ class SegmentedCatalogue:
         (a repeated gid is allowed: the LAST row wins).
         """
         gids = [int(g) for g in np.atleast_1d(np.asarray(gids))]
-        R = np.atleast_2d(np.asarray(rows, np.float32))
+        R = self._validate_rows(rows, "updated rows")
         if len(gids) != R.shape[0]:
             raise ValueError("one row per gid required")
-        if R.shape[1] != self.rank:
-            raise ValueError(f"rank mismatch: {R.shape[1]} != {self.rank}")
         with self._lock:
             seen: set = set()
             located = []
@@ -575,12 +702,13 @@ class SegmentedCatalogue:
                     # have been frozen (or even folded into a new base) by
                     # a mid-batch compaction; the last row wins everywhere
                     self._kill_located([(gid, *loc)])
-                if self._delta.full:
+                if self._delta.full or faults.fire(FAULT_DELTA_OVERFLOW):
                     self._compact_locked()
                 self._delta.append(row, gid)
                 self._note_delta_peak()
             self.stats.n_updates += len(gids)
             self._maybe_compact_locked()
+        self._after_mutation()
 
     # -- compaction ----------------------------------------------------------
 
@@ -591,7 +719,57 @@ class SegmentedCatalogue:
         if self._delta.full or (snap.n_dead and snap.n_dead >= thresh):
             self._compact_locked()
 
-    def _compact_locked(self) -> None:
+    def _after_mutation(self) -> None:
+        """Post-mutation hooks that must run OFF the catalogue lock.
+
+        The chain cap may JOIN an in-flight build thread — and the build
+        acquires the lock to swap, so joining under it would deadlock.
+        Every mutation entry point calls this after releasing the lock.
+        """
+        self.check_watchdog()
+        self._enforce_chain_cap()
+
+    def _enforce_chain_cap(self) -> None:
+        """Force the L0 chain back under ``max_l0_segments``.
+
+        Sustained mutation pressure against failing (or merely slow)
+        builds grows the sealed chain; every extra segment is one more
+        dense matmul per query, so an unbounded chain degrades latency
+        unboundedly. Past the cap this BLOCKS the mutating caller: joins
+        the in-flight build if there is one, otherwise runs a forced
+        SYNCHRONOUS build inline (bypassing the failure backoff — the
+        cap outranks it). Bounded: after ``build_retry_limit + 1``
+        consecutive inline failures it gives up and returns (the chain
+        stays queryable; nothing is lost).
+        """
+        attempts = 0
+        while True:
+            with self._lock:
+                if len(self._frozen) <= self.max_l0_segments:
+                    return
+                t = self._build_thread
+                if t is None:
+                    if attempts > self.build_retry_limit:
+                        return
+                    attempts += 1
+                    self.stats.n_forced_sync_compactions += 1
+                    self._compact_locked(force=True, force_sync=True)
+                    continue
+            t.join()        # off-lock: the build takes the lock to swap
+
+    def _retry_build(self) -> None:
+        """Timer target: the automatic post-failure retry (async mode)."""
+        with self._lock:
+            self._retry_timer = None
+            if self._build_thread is not None:
+                return
+            if (self._frozen or self._delta.count
+                    or self._snapshot.n_dead):
+                # force=True: the elapsed timer IS the backoff
+                self._compact_locked(force=True)
+
+    def _compact_locked(self, force: bool = False,
+                        force_sync: bool = False) -> None:
         """Freeze the active delta and rebuild (inline or on a thread).
 
         NEVER blocks and never releases the lock: if a background build
@@ -599,11 +777,19 @@ class SegmentedCatalogue:
         frozen chain and this call returns — the chain keeps serving
         queries and folds wholesale at the next compaction trigger (the
         L0 behaviour of an LSM under sustained write pressure; chain
-        length is bounded by how far appends outpace builds). A build
-        folds the ENTIRE chain as of its freeze point; a build exception
-        leaves the sealed segments in place (still queryable, refolded
-        later — a failed build never loses rows) and clears the thread
-        slot (``try/finally``).
+        length is bounded by ``max_l0_segments`` via the chain cap). A
+        build folds the ENTIRE chain as of its freeze point; a build
+        exception leaves the sealed segments in place (still queryable,
+        refolded later — a failed build never loses rows) and clears the
+        thread slot (``try/finally``).
+
+        After a failed build, new attempts are GATED: they wait out an
+        exponential backoff and stop entirely after
+        ``build_retry_limit`` consecutive failures. ``force=True``
+        (explicit :meth:`compact`, the chain cap, the retry timer)
+        bypasses the gate; ``force_sync=True`` additionally runs the
+        build inline even in ``compact_async`` mode (the chain-cap
+        back-pressure path).
         """
         if (self._delta.count == 0 and not self._frozen
                 and self._snapshot.n_dead == 0):
@@ -613,8 +799,20 @@ class SegmentedCatalogue:
             sealed.seal()
             self._frozen.append(sealed)
             self._delta = DeltaSegment(self.delta_capacity, self.rank)
+            self.stats.max_l0_chain = max(self.stats.max_l0_chain,
+                                          len(self._frozen))
         if self._build_thread is not None:
             return                            # in-flight build; chain waits
+        if not force and self._consec_build_failures:
+            # recovering from failure: stop auto-retrying entirely past
+            # the limit, and from the SECOND consecutive failure on wait
+            # out the exponential backoff (the first failure retries at
+            # the very next trigger — transient blips heal immediately).
+            # Explicit compact() and the chain cap still force attempts.
+            if (self._consec_build_failures > self.build_retry_limit
+                    or (self._consec_build_failures >= 2
+                        and time.monotonic() < self._retry_not_before)):
+                return
         snap = self._snapshot
         folding = list(self._frozen)
         new_rows, new_gids = self._live_concat_locked(snap, folding)
@@ -632,12 +830,15 @@ class SegmentedCatalogue:
             own_compiles = 0
             headroom_compiles = 0
             try:
+                faults.fire(FAULT_STALL)      # test seam: slow/stuck build
+                faults.fire(FAULT_BUILD)      # test seam: failing build
                 ctx = EngineContext(new_rows, version=version,
                                     **self._ctx_kwargs)
                 ctx.index                     # offline index build, off-lock
                 new_snap = Snapshot(new_rows, new_gids, version, ctx)
                 if new_gids[0] < 0:
                     new_snap.kill_rows([0])   # the guard row is dead
+                faults.fire(FAULT_WARM)       # test seam: readiness failure
                 if self._warm_spec is not None:
                     # Readiness pass over the new snapshot BEFORE the swap
                     # (at the serving k and the escalated shape): builds +
@@ -656,13 +857,14 @@ class SegmentedCatalogue:
                     # attributed ``trace_counts`` — a trace a concurrent
                     # serving thread causes on the OLD snapshot during
                     # this window is its own, not this build's.
-                    k, sizes, engines, headroom = self._warm_spec
-                    ctx.warmup(k, batch_sizes=sizes, engines=engines)
+                    k, sizes, engines, headroom, budgets = self._warm_spec
+                    ctx.warmup(k, batch_sizes=sizes, engines=engines,
+                               budgets=budgets)
                     kb_esc = min(new_snap.num_rows,
                                  int(k) + self.overfetch_reserve)
                     if engines and kb_esc > min(new_snap.num_rows, int(k)):
                         ctx.warmup(kb_esc, batch_sizes=sizes,
-                                   engines=engines)
+                                   engines=engines, budgets=budgets)
                     own_compiles = sum(ctx.trace_counts.values())
                     nxt = 2 * ctx.m_bucket
                     if (headroom
@@ -686,11 +888,12 @@ class SegmentedCatalogue:
                         # its own compiles — recorded, off the query
                         # path.)
                         ctx.warmup(k, batch_sizes=sizes, engines=engines,
-                                   m_buckets=(nxt,))
+                                   m_buckets=(nxt,), budgets=budgets)
                         if engines and kb_esc > min(new_snap.num_rows,
                                                     int(k)):
                             ctx.warmup(kb_esc, batch_sizes=sizes,
-                                       engines=engines, m_buckets=(nxt,))
+                                       engines=engines, m_buckets=(nxt,),
+                                       budgets=budgets)
                         headroom_compiles = (
                             sum(ctx.trace_counts.values()) - own_compiles)
                         with self._lock:
@@ -712,6 +915,13 @@ class SegmentedCatalogue:
                     self.stats.compaction_s_total += dt
                     self.stats.engine_compiles_total += own_compiles
                     self.stats.headroom_compiles_total += headroom_compiles
+                    # recovery: a successful swap clears ALL stale failure
+                    # state — the error belongs to a chain that no longer
+                    # exists, and keeping it would gate future builds
+                    self.last_build_error = None
+                    self._consec_build_failures = 0
+                    self._retry_not_before = 0.0
+                    self._last_backoff_s = 0.0
             except Exception as exc:
                 # the sealed segments stay in self._frozen: still
                 # queryable, re-folded by the next compaction — a failed
@@ -720,13 +930,34 @@ class SegmentedCatalogue:
                 # the middle of a mutation batch, and raising there
                 # would abort the batch after its kills but before its
                 # appends (losing updated rows). ``compact(wait=True)``
-                # surfaces the recorded failure to callers.
-                self.last_build_error = exc
-                self.stats.n_failed_compactions += 1
+                # surfaces the recorded failure to callers. Recovery: an
+                # exponential backoff gates ordinary retriggers, and in
+                # async mode a daemon timer schedules the retry itself so
+                # a quiet catalogue (no further mutations) still heals.
+                with self._lock:
+                    self.last_build_error = exc
+                    self.stats.n_failed_compactions += 1
+                    self._consec_build_failures += 1
+                    backoff = min(
+                        self.build_backoff_s
+                        * (2 ** (self._consec_build_failures - 1)),
+                        self.build_backoff_max_s)
+                    self._last_backoff_s = backoff
+                    self._retry_not_before = time.monotonic() + backoff
+                    if (self.auto_retry and self.compact_async
+                            and self._consec_build_failures
+                            <= self.build_retry_limit
+                            and self._retry_timer is None):
+                        tmr = threading.Timer(backoff, self._retry_build)
+                        tmr.daemon = True
+                        self._retry_timer = tmr
+                        tmr.start()
             else:
                 ok = True
             finally:
                 with self._lock:
+                    self._build_started_at = None
+                    self._watchdog_flagged = False
                     if self._build_thread is threading.current_thread():
                         self._build_thread = None
                     if ok and self.compact_async and self._frozen:
@@ -737,12 +968,19 @@ class SegmentedCatalogue:
                         # an empty slot between build and refold.
                         self._compact_locked()
 
-        if self.compact_async:
+        if self._consec_build_failures:
+            self.stats.n_build_retries += 1     # attempt after >=1 failure
+        self._build_started_at = time.monotonic()
+        self._watchdog_flagged = False
+        if self.compact_async and not force_sync:
             t = threading.Thread(target=build, name="segcat-compact",
                                  daemon=True)
             self._build_thread = t
             t.start()
         else:
+            # force_sync: chain-cap back-pressure — the mutating caller
+            # pays for the fold it caused (runs under the RLock; build's
+            # swap re-enters it, which an RLock permits inline)
             build()
 
     def compact(self, wait: bool = True) -> None:
@@ -756,7 +994,10 @@ class SegmentedCatalogue:
                 if not first and not self._frozen:
                     return
                 fails_before = self.stats.n_failed_compactions
-                self._compact_locked()
+                # force=True: an explicit compact() call outranks the
+                # failure backoff gate (and wait=True would otherwise
+                # spin forever against it)
+                self._compact_locked(force=True)
                 t = self._build_thread
                 first = False
             if not wait:
@@ -775,7 +1016,12 @@ class SegmentedCatalogue:
     def flush(self) -> None:
         """Block until every in-flight background build (including any
         auto-refold a build kicked off for segments sealed during it)
-        has swapped in."""
+        has swapped in.
+
+        Deliberately PASSIVE about failures: a failed build leaves its
+        sealed chain in place and flush returns with it intact (the
+        recorded error in :attr:`last_build_error` is the signal) —
+        :meth:`compact` ``(wait=True)`` is the "fold or raise" API."""
         while True:
             with self._lock:
                 # under the lock: a finishing build clears the slot and
@@ -810,7 +1056,8 @@ class SegmentedCatalogue:
                 self._tail_cache[key] = fn
         return fn
 
-    def query(self, engine: Engine, U, k: int
+    def query(self, engine: Engine, U, k: int,
+              budget: Optional[int] = None
               ) -> Tuple[TopKResult, QueryInfo]:
         """Exact top-``k`` over every LIVE item, through ``engine``.
 
@@ -820,6 +1067,14 @@ class SegmentedCatalogue:
         discarded optimistic run shows up in wall-clock, not in the
         paper's score metric), and ``info`` carries the segmented
         accounting (:class:`QueryInfo`).
+
+        ``budget`` caps the BASE engine's scan depth (list rows; see
+        ``Engine.run``). The returned ``result.upper`` then bounds every
+        un-enumerated base item, so :func:`certificate_gaps` stays valid
+        over the live catalogue: the delta segments are always fully
+        dense-scored (never budgeted), and the tombstone escalation
+        ladder is budget-independent — a certified slot is provably in
+        the true live top-``k`` even when the base scan halted early.
 
         The whole batch is computed against ONE consistent state
         captured under the lock (snapshot + dead mask + delta views) —
@@ -834,7 +1089,7 @@ class SegmentedCatalogue:
             dead_dev, gids_dev = snap.dead_dev, snap.gids_dev
         if not views and n_dead == 0 and snap.identity:
             # never-mutated fast path: byte-identical to the static server
-            res = engine.run(snap.ctx, U, k)
+            res = engine.run(snap.ctx, U, k, budget=budget)
             return res, QueryInfo(0, min(int(k), snap.num_rows), 0,
                                   snap.version)
         # no np.asarray: a device-resident U must not round-trip the host
@@ -847,7 +1102,7 @@ class SegmentedCatalogue:
         mb = snap.num_rows
 
         def run_at(kb):
-            res = engine.run(snap.ctx, U_dev, kb)
+            res = engine.run(snap.ctx, U_dev, kb, budget=budget)
             # resolve mask/gids EAGERLY (two primitive gathers): the jitted
             # tail then never sees an [M_base]-shaped array, so its compile
             # key is snapshot-version-free
@@ -883,7 +1138,12 @@ class SegmentedCatalogue:
             res, vals, gids, dropped = run_at(kb)
             retried = True
         n_scored = res.n_scored + jnp.int32(n_delta_live)
-        out = TopKResult(vals[:b], gids[:b], n_scored[:b], res.depth[:b])
+        # the base engine's upper bound covers every un-enumerated base
+        # item, and the delta is fully scored — so it is ALSO a valid
+        # certificate bound for the merged live result
+        upper = None if res.upper is None else res.upper[:b]
+        out = TopKResult(vals[:b], gids[:b], n_scored[:b], res.depth[:b],
+                         upper=upper)
         return out, QueryInfo(int(n_delta_live), kb, len(views),
                               snap.version, retried)
 
@@ -900,7 +1160,8 @@ class SegmentedCatalogue:
 
     def warm(self, k: int, batch_sizes=(1, 64),
              snap: Optional[Snapshot] = None,
-             engines=None, m_buckets=None) -> "SegmentedCatalogue":
+             engines=None, m_buckets=None,
+             budgets=None) -> "SegmentedCatalogue":
         """Compile the segmented tail for every delta-capacity bucket.
 
         Tails are warmed at BOTH base-fetch shapes — plain ``k`` (the
@@ -958,7 +1219,8 @@ class SegmentedCatalogue:
                         fn(bv, tomb, bg, U, (frozen, dummy_seg(d))))
         if engines and kb_esc > kb:
             snap.ctx.warmup(kb_esc, batch_sizes=batch_sizes,
-                            engines=engines, m_buckets=m_buckets)
+                            engines=engines, m_buckets=m_buckets,
+                            budgets=budgets)
         if m_buckets:
             with self._lock:
                 self._headroom_bucket = max(
@@ -967,7 +1229,7 @@ class SegmentedCatalogue:
         return self
 
     def set_warm_spec(self, k: int, batch_sizes, engines=None,
-                      headroom: bool = True) -> None:
+                      headroom: bool = True, budgets=None) -> None:
         """Remember what to ready on each compacted snapshot, so the
         post-swap first query hits compiled executables (the rebuild cost
         stays off the query hot path, including compiles).
@@ -982,4 +1244,6 @@ class SegmentedCatalogue:
         ``engine_compiles_total``.
         """
         self._warm_spec = (int(k), tuple(batch_sizes), engines,
-                           bool(headroom))
+                           bool(headroom),
+                           None if budgets is None
+                           else tuple(int(b) for b in budgets))

@@ -35,8 +35,9 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +51,7 @@ from repro.core.engines import (
     get_engine,
     select_engine,
 )
+from repro.core.naive import TopKResult
 from repro.core.segments import SegmentedCatalogue
 from repro.core.strategies import sign_bucket_label
 
@@ -86,6 +88,16 @@ class ServeStats:
     lat_us_ring: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
     sign_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: degradation-ladder decisions taken while serving THIS method
+    #: (keyed by rung: "to_norm" / "to_budgeted" / "shed"), recorded on
+    #: the REQUESTED method's stats — the ladder is an admission story,
+    #: so its accounting follows what the caller asked for, while the
+    #: raw serve counters above follow the engine that actually ran
+    degradations: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #: queries whose result carried at least one UNCERTIFIED slot
+    #: (certificate gap > 0 — possible under a step budget, never on the
+    #: exact path); the CI degradation smoke gates on this being honest
+    n_uncertified: int = 0
 
     @property
     def scores_per_query(self) -> float:
@@ -114,10 +126,38 @@ class ServeStats:
         return self.latency_percentile(99.0)
 
 
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Load/deadline policy for :meth:`TopKServer.query` (DESIGN.md §12).
+
+    When a deadline is in force, each chunk walks an explicit
+    degradation ladder instead of queueing unboundedly: the PREFERRED
+    engine if its predicted cost fits the remaining time, else ``norm``
+    (the cheapest exact scan), else a BUDGETED ``norm`` scan whose
+    result carries per-item certificates (``TopKResult.upper``), else —
+    deadline already blown or the server over ``max_inflight`` — the
+    chunk is SHED: sentinel values (``-inf`` scores, ``-1`` ids, ``+inf``
+    certificate gaps, i.e. nothing certified), never a silent partial
+    answer pretending to be exact. Every downgrade/shed decision lands
+    in :attr:`ServeStats.degradations` under the requested method.
+    """
+
+    #: default per-query deadline (None = no deadline: never degrade);
+    #: ``query(deadline_ms=...)`` overrides per call
+    deadline_ms: Optional[float] = None
+    #: concurrent chunks in flight before overload shedding kicks in
+    max_inflight: int = 8
+    #: scan budget (list rows) used at the "budgeted" ladder rung
+    degrade_budget: int = 64
+    #: shed on overload/expiry (False = serve anyway, just record it)
+    shed_on_overload: bool = True
+
+
 class TopKServer:
     def __init__(self, model: SepLRModel, max_batch: int = 64,
                  block_size: int = 256, delta_capacity: int = 256,
-                 compact_async: bool = False):
+                 compact_async: bool = False,
+                 policy: Optional[AdmissionPolicy] = None):
         self.model = model
         self.catalogue = SegmentedCatalogue(
             model.targets, delta_capacity=delta_capacity,
@@ -125,6 +165,13 @@ class TopKServer:
         self.max_batch = max_batch
         self.block_size = block_size
         self.stats: Dict[str, ServeStats] = {}
+        self.policy = policy if policy is not None else AdmissionPolicy()
+        # per-engine EWMA of per-query serve seconds: the ladder's cost
+        # model. Seeded lazily from observed latencies; tests set entries
+        # directly to make admission decisions deterministic.
+        self._cost_ewma: Dict[str, float] = {}
+        self._admit_lock = threading.Lock()
+        self._inflight = 0
 
     @property
     def ctx(self) -> EngineContext:
@@ -148,7 +195,7 @@ class TopKServer:
         return engine_names()
 
     def warmup(self, k: int, batch_sizes=None, engines=None,
-               m_buckets=None) -> "TopKServer":
+               m_buckets=None, budgets=None) -> "TopKServer":
         """Populate the per-engine compiled-executable cache ahead of
         traffic (DESIGN.md §6/§10). After warmup, same-shape queries hit
         the cache with zero new traces (``self.ctx.trace_counts`` proves
@@ -169,20 +216,28 @@ class TopKServer:
         traces — and records the warm spec so compaction readies each
         replacement snapshot before swapping it in (compile-free for
         warmed buckets).
+
+        ``budgets`` additionally warms each budget-capable engine's
+        BUDGETED variants (the budget joins the executor config, so each
+        distinct budget is its own cache entry — DESIGN.md §12); warmed
+        budgets then stay compile-free across compactions exactly like
+        the unbudgeted path, including the degradation ladder's
+        ``policy.degrade_budget``.
         """
         sizes = tuple(batch_sizes) if batch_sizes else (1, self.max_batch)
         if m_buckets is None:
             mb = self.ctx.m_bucket
             m_buckets = (mb, 2 * mb)
         self.ctx.warmup(k, batch_sizes=sizes, engines=engines,
-                        m_buckets=m_buckets)
+                        m_buckets=m_buckets, budgets=budgets)
         self.catalogue.warm(k, batch_sizes=sizes, engines=engines,
-                            m_buckets=m_buckets)
+                            m_buckets=m_buckets, budgets=budgets)
         # compactions renew the headroom iff the boot warmup established
         # any (each build then pre-traces ITS next bucket, keeping every
         # future crossing compile-free, not just the first)
         headroom = any(int(b) > self.ctx.m_bucket for b in m_buckets)
-        self.catalogue.set_warm_spec(k, sizes, engines, headroom=headroom)
+        self.catalogue.set_warm_spec(k, sizes, engines, headroom=headroom,
+                                     budgets=budgets)
         return self
 
     # -- streaming mutations (DESIGN.md §9) ---------------------------------
@@ -224,6 +279,17 @@ class TopKServer:
             "headroom_compiles_total": cat.stats.headroom_compiles_total,
             "compaction_s_total": cat.stats.compaction_s_total,
             "last_compaction_s": cat.stats.last_compaction_s,
+            # recovery machinery (DESIGN.md §12): retry/backoff state,
+            # chain-cap pressure, and watchdog flags — all zero on a
+            # healthy server
+            "n_build_retries": cat.stats.n_build_retries,
+            "n_forced_sync_compactions": cat.stats.n_forced_sync_compactions,
+            "n_stuck_builds": cat.stats.n_stuck_builds,
+            "max_l0_chain": cat.stats.max_l0_chain,
+            "l0_chain_len": cat.l0_chain_len,
+            "consecutive_build_failures": cat.consecutive_build_failures,
+            "current_backoff_s": cat.current_backoff_s,
+            "retry_pending": int(cat.retry_pending),
         }
 
     def _record(self, method: str, res, dt: float, n: int,
@@ -239,7 +305,46 @@ class TopKServer:
             s.sign_batches[sign_label] = s.sign_batches.get(sign_label,
                                                             0) + 1
 
-    def query(self, U: Array, k: int, method: str = "bta"):
+    def _shed_result(self, n: int, k: int) -> TopKResult:
+        """Sentinel result for a shed chunk: explicitly nothing — ``-inf``
+        scores, ``-1`` ids, ``+inf`` certificate gaps (no slot certified),
+        never a partial answer pretending to be exact."""
+        return TopKResult(
+            np.full((n, k), -np.inf, np.float32),
+            np.full((n, k), -1, np.int32),
+            np.zeros((n,), np.int32),
+            np.zeros((n,), np.int32),
+            upper=np.full((n,), np.inf, np.float32))
+
+    def _admit(self, eng: Engine, n: int,
+               remaining_s: Optional[float]):
+        """Pick the degradation-ladder rung for one ``n``-query chunk.
+
+        Returns ``(engine_or_None, budget, rung)`` — ``None`` engine
+        means shed. Cost predictions come from the per-engine EWMA of
+        observed per-query seconds (:attr:`_cost_ewma`); an engine with
+        no history predicts 0 (optimistic: admit, then learn).
+        """
+        pol = self.policy
+        if remaining_s is None:
+            return eng, None, "full"
+
+        def cost(name: str) -> float:
+            return self._cost_ewma.get(name, 0.0) * n
+
+        if remaining_s <= 0.0:
+            if pol.shed_on_overload:
+                return None, None, "shed"
+            return get_engine("norm"), pol.degrade_budget, "to_budgeted"
+        if cost(eng.name) <= remaining_s:
+            return eng, None, "full"
+        if eng.name != "norm" and cost("norm") <= remaining_s:
+            return get_engine("norm"), None, "to_norm"
+        return get_engine("norm"), pol.degrade_budget, "to_budgeted"
+
+    def query(self, U: Array, k: int, method: str = "bta",
+              budget: Optional[int] = None,
+              deadline_ms: Optional[float] = None):
         """U: [B, R] (or [R]). Returns TopKResult batched like U.
 
         ``method`` is any registry name (or alias) from
@@ -254,8 +359,37 @@ class TopKServer:
         carry GLOBAL item ids and reflect every mutation exactly (the
         segmented query path, DESIGN.md §9); a never-mutated server runs
         the raw engine path unchanged.
+
+        **Budgeted queries** (DESIGN.md §12): ``budget`` caps the scan
+        depth (list rows) of budget-capable engines. The result's
+        ``upper`` field then bounds every un-scanned item;
+        :func:`repro.core.certificate_gaps` ≤ 0 marks the slots that are
+        PROVABLY in the true top-``k`` (always a prefix). Exact engines
+        return ``upper = -inf`` (everything certified).
+
+        **Deadlines** (``deadline_ms``, or ``policy.deadline_ms``): each
+        chunk walks the admission ladder (:class:`AdmissionPolicy`) —
+        preferred engine → ``norm`` → budgeted ``norm`` → shed — based
+        on the EWMA cost model and the time remaining; decisions are
+        recorded in :attr:`ServeStats.degradations` under the REQUESTED
+        method. Over ``policy.max_inflight`` concurrent chunks, new
+        chunks shed immediately instead of queueing.
+
+        Validation: non-positive ``k``/``budget``, negative
+        ``deadline_ms``, wrong-rank or >2-D ``U``, and non-finite HOST
+        query values raise ``ValueError`` (device-resident inputs skip
+        the finiteness scan — reading them back would break the
+        no-round-trip contract above).
         """
         engine: Engine = get_engine(method)
+        if int(k) <= 0:
+            raise ValueError(f"k must be a positive int, got {k!r}")
+        if budget is not None and int(budget) <= 0:
+            raise ValueError(
+                f"budget must be a positive int or None, got {budget!r}")
+        if deadline_ms is not None and float(deadline_ms) < 0:
+            raise ValueError(
+                f"deadline_ms must be >= 0 or None, got {deadline_ms!r}")
         # Keep the batch wherever the caller had it: host inputs are
         # sliced and dispatched as numpy (auto's nnz statistic never
         # touches the device), device-resident inputs stay on device with
@@ -265,22 +399,84 @@ class TopKServer:
             U_all = jnp.atleast_2d(U)
         else:
             U_all = np.atleast_2d(np.asarray(U, np.float32))
+        if U_all.ndim != 2:
+            raise ValueError(
+                f"U must be [B, R] or [R], got shape {U_all.shape}")
+        rank = self.catalogue.rank
+        if U_all.shape[1] != rank:
+            raise ValueError(
+                f"query rank {U_all.shape[1]} != catalogue rank {rank}")
+        if isinstance(U_all, np.ndarray) and not np.all(np.isfinite(U_all)):
+            bad = int(np.argwhere(~np.isfinite(U_all).all(axis=1))[0, 0])
+            raise ValueError(f"query row {bad} contains NaN/Inf values")
+        if deadline_ms is None:
+            deadline_ms = self.policy.deadline_ms
+        t_admit = time.perf_counter()
+        req_stats = self.stats.setdefault(engine.name, ServeStats())
         outs = []
         for i in range(0, U_all.shape[0], self.max_batch):
             chunk = U_all[i: i + self.max_batch]
+            n = chunk.shape[0]
             eng = (select_engine(self.ctx, chunk)
                    if engine.name == "auto" else engine)
-            # sign bucket of this chunk, for the per-bucket serve stats —
-            # only engines with batch specialisation pay the (host-side,
-            # input-value-only) read; it mirrors the bucket the dispatch
-            # itself computes for the compile key (DESIGN.md §11)
-            label = sign_bucket_label(eng.batch_config(self.ctx, chunk)) \
-                if eng.batch_config is not None else ""
-            t0 = time.perf_counter()
-            res, info = self.catalogue.query(eng, chunk, k)
-            res = jax.tree_util.tree_map(np.asarray, res)
-            dt = time.perf_counter() - t0
-            self._record(eng.name, res, dt, chunk.shape[0],
+            # admission: overload first (cheap counter check), then the
+            # deadline ladder on the time this query has left
+            with self._admit_lock:
+                overloaded = (self._inflight >= self.policy.max_inflight
+                              and self.policy.shed_on_overload)
+                self._inflight += 1
+            try:
+                if overloaded:
+                    run_eng, bud, rung = None, None, "shed"
+                else:
+                    remaining = None if deadline_ms is None else (
+                        deadline_ms / 1e3
+                        - (time.perf_counter() - t_admit))
+                    run_eng, bud, rung = self._admit(eng, n, remaining)
+                if rung != "full":
+                    req_stats.degradations[rung] = (
+                        req_stats.degradations.get(rung, 0) + 1)
+                if run_eng is None:
+                    res = self._shed_result(n, int(k))
+                    req_stats.n_uncertified += n
+                    outs.append(res)
+                    continue
+                if bud is None:
+                    bud = budget  # explicit caller budget, not a downgrade
+                # sign bucket of this chunk, for the per-bucket serve
+                # stats — only engines with batch specialisation pay the
+                # (host-side, input-value-only) read; it mirrors the
+                # bucket the dispatch itself computes for the compile key
+                # (DESIGN.md §11)
+                label = (sign_bucket_label(
+                            run_eng.batch_config(self.ctx, chunk))
+                         if run_eng.batch_config is not None else "")
+                t0 = time.perf_counter()
+                res, info = self.catalogue.query(run_eng, chunk, k,
+                                                 budget=bud)
+                res = jax.tree_util.tree_map(np.asarray, res)
+                dt = time.perf_counter() - t0
+            finally:
+                with self._admit_lock:
+                    self._inflight -= 1
+            if res.upper is None:
+                # legacy/sharded paths carry no bound; they are exact, so
+                # the vacuous bound (everything certified) is the truth —
+                # and it keeps chunk results concatenable
+                res = res._replace(upper=np.full(
+                    (np.asarray(res.values).shape[0],), -np.inf,
+                    np.float32))
+            if bud is not None:
+                gaps = (res.upper[:, None] - res.values) > 0
+                unc = np.logical_and(gaps, res.indices >= 0)
+                req_stats.n_uncertified += int(np.sum(np.any(unc, axis=1)))
+            # cost model: learn per-query seconds per (engine, budgeted?)
+            key = run_eng.name if bud is None else f"{run_eng.name}@budget"
+            prev = self._cost_ewma.get(key)
+            per_q = dt / max(n, 1)
+            self._cost_ewma[key] = (per_q if prev is None
+                                    else 0.8 * prev + 0.2 * per_q)
+            self._record(run_eng.name, res, dt, n,
                          info.delta_scored, sign_label=label)
             outs.append(res)
         return jax.tree_util.tree_map(

@@ -23,7 +23,17 @@ def test_fig3_found_before_proven():
     rows = fig3_halted.run(quick=True)
     s = rows[-1]
     assert s["median_found_at"] < s["median_terminated"]
-    assert s["halted_precision_at_budget"]["250"] >= 0.95
+    eng = [r for r in rows if r.get("engine")]
+    assert eng, "no budgeted engine rows"
+    # soundness: certified slots are never wrong, at any budget
+    assert all(r["certified_exact"] for r in eng)
+    assert all(r["certified_fraction"] <= r["precision"] + 1e-9 for r in eng)
+    # the paper's halted-TA point, through the real engine: a modest
+    # budget already finds the true top-K even though proving it
+    # (certified_fraction -> 1) takes longer
+    ta250 = next(r for r in eng
+                 if r["engine"] == "ta" and r["budget"] == 250)
+    assert ta250["precision"] >= 0.95
 
 
 def test_table4_scaling_shape():

@@ -1,0 +1,190 @@
+"""Budgeted exact-prefix queries and their certificates (DESIGN.md §12).
+
+The property this file pins down: a budget-capped scan returns, besides
+the usual top-K, an ``upper`` bound on every item it did NOT enumerate —
+and every slot whose certificate gap (``upper - value``) is <= 0 is
+PROVABLY a member of the true top-K, at the true rank. Validated against
+the faithful-TA / dense oracles at every tested budget, for both sign
+patterns (all-positive and mixed-sign queries, the batched list scan's
+compile-specialisation axis) and across the M-bucket boundaries
+``2^n - 1, 2^n, 2^n + 1``. Also pinned: budgeted variants join the
+argument-passing compile contract (DESIGN.md §10) — warmed budgets stay
+compile-free across compactions.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    EngineContext,
+    SepLRModel,
+    certificate_gaps,
+    certified_counts,
+    get_engine,
+    trace_totals,
+)
+from repro.core.naive import TopKResult
+from repro.serving.server import TopKServer
+
+BUDGET_ENGINES = ("ta", "bta", "norm")
+K = 6
+
+
+def _dense_oracle(T, U, k):
+    s = U.astype(np.float64) @ T.astype(np.float64).T
+    order = np.argsort(-s, kind="stable", axis=1)[:, :k]
+    return (s[np.arange(U.shape[0])[:, None], order], order)
+
+
+def _queries(rng, n, r, sign):
+    U = rng.standard_normal((n, r)).astype(np.float32)
+    return np.abs(U) if sign == "pos" else U
+
+
+@pytest.mark.parametrize("m", (1023, 1024, 1025))
+@pytest.mark.parametrize("sign", ("pos", "mixed"))
+def test_certified_slots_are_the_true_topk_prefix(m, sign):
+    """At EVERY budget, the certified slots (gap <= 0) match the true
+    top-K prefix exactly — values AND membership — for every
+    budget-capable engine; certification is monotone within a result
+    (a prefix, never a scattered subset)."""
+    rng = np.random.default_rng(m + (0 if sign == "pos" else 1))
+    T = rng.standard_normal((m, 12)).astype(np.float32)
+    U = _queries(rng, 6, 12, sign)
+    ctx = EngineContext(T, block_size=64, ta_chunk=16)
+    ref_vals, _ = _dense_oracle(T, U, K)
+    for name in BUDGET_ENGINES:
+        eng = get_engine(name)
+        for budget in (1, 4, 16, 64, 10 ** 9):
+            res = eng.run(ctx, jnp.asarray(U), K, budget=budget)
+            assert res.upper is not None, (name, budget)
+            gaps = np.asarray(certificate_gaps(res))
+            counts = np.asarray(certified_counts(res))
+            vals = np.asarray(res.values)
+            for q in range(U.shape[0]):
+                certified = gaps[q] <= 0
+                c = int(counts[q])
+                # certified slots form a PREFIX (values sorted desc ->
+                # gaps ascending)
+                assert np.all(certified[:c]) and not np.any(certified[c:]), \
+                    (name, budget, q, gaps[q])
+                # ... and the prefix is the true top-K prefix
+                np.testing.assert_allclose(
+                    vals[q, :c], ref_vals[q, :c], atol=1e-4,
+                    err_msg=f"{name} budget={budget} query={q}")
+            # an effectively unlimited budget must certify everything
+            if budget == 10 ** 9:
+                assert np.all(counts == K), (name, counts)
+
+
+@pytest.mark.parametrize("name", ("naive",) + BUDGET_ENGINES)
+def test_exact_runs_are_fully_certified(name):
+    """Without a budget every engine's result is exact, and its
+    certificate says so: every slot's gap <= 0."""
+    rng = np.random.default_rng(7)
+    T = rng.standard_normal((400, 12)).astype(np.float32)
+    U = rng.standard_normal((4, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=64, ta_chunk=16)
+    res = get_engine(name).run(ctx, jnp.asarray(U), K)
+    assert np.all(np.asarray(certified_counts(res)) == K)
+    ref_vals, _ = _dense_oracle(T, U, K)
+    np.testing.assert_allclose(np.asarray(res.values), ref_vals, atol=1e-4)
+
+
+def test_pad_slots_never_certify():
+    """k > num_live: the -inf/-1 pad slots must carry +inf gaps, not the
+    NaN of (-inf) - (-inf)."""
+    rng = np.random.default_rng(8)
+    T = rng.standard_normal((4, 12)).astype(np.float32)
+    U = rng.standard_normal((2, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=64)
+    res = get_engine("norm").run(ctx, jnp.asarray(U), 7)
+    gaps = np.asarray(certificate_gaps(res))
+    ids = np.asarray(res.indices)
+    assert not np.any(np.isnan(gaps))
+    assert np.all(gaps[ids < 0] == np.inf)
+    assert np.all(np.asarray(certified_counts(res)) == 4)
+
+
+def test_budget_actually_caps_the_scan():
+    """A tight budget must bound the scan depth (that is the whole
+    admission-control point), and n_scored with it."""
+    rng = np.random.default_rng(9)
+    T = rng.standard_normal((2048, 12)).astype(np.float32)
+    # anti-adversarial queries: orthogonal-ish, so full scans go deep
+    U = rng.standard_normal((4, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=64, ta_chunk=16)
+    for name in BUDGET_ENGINES:
+        eng = get_engine(name)
+        full = eng.run(ctx, jnp.asarray(U), K)
+        capped = eng.run(ctx, jnp.asarray(U), K, budget=1)
+        assert int(np.max(np.asarray(capped.depth))) <= \
+            max(64, 16), (name, np.asarray(capped.depth))
+        assert int(np.sum(np.asarray(capped.n_scored))) <= \
+            int(np.sum(np.asarray(full.n_scored))), name
+
+
+def test_certificate_gaps_requires_an_upper_bound():
+    res = TopKResult(jnp.zeros((2, 3)), jnp.zeros((2, 3), jnp.int32),
+                     jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.int32))
+    with pytest.raises(ValueError, match="no upper bound"):
+        certificate_gaps(res)
+
+
+def test_budget_unsupported_engines_reject_loudly():
+    """Engines that cannot halt early must refuse a budget instead of
+    silently returning an uncertified-but-claimed-exact result."""
+    rng = np.random.default_rng(10)
+    T = rng.standard_normal((64, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=32)
+    U = jnp.asarray(rng.standard_normal((2, 12)).astype(np.float32))
+    with pytest.raises(ValueError, match="budget"):
+        get_engine("norm_sharded").run(ctx, U, 3, budget=5)
+
+
+def test_warmed_budgets_stay_compile_free_across_compaction():
+    """The budget joins the executor config (DESIGN.md §10/§12): after
+    warmup(budgets=...), budgeted queries before AND after a same-bucket
+    compaction dispatch cached executables — zero process-wide retraces,
+    engine_compiles_per_compaction == 0."""
+    rng = np.random.default_rng(11)
+    # R=15 keeps these signatures process-unique (the module-level
+    # executors cache process-wide; see test_argpass.py)
+    T = rng.standard_normal((200, 15)).astype(np.float32)
+    srv = TopKServer(SepLRModel(jnp.asarray(T)), max_batch=8,
+                     block_size=32, delta_capacity=16)
+    srv.warmup(5, batch_sizes=(8,), engines=("norm", "bta"),
+               budgets=(32,))
+    U = rng.standard_normal((8, 15)).astype(np.float32)
+    srv.query(U, 5, "norm", budget=32)
+    srv.query(U, 5, "bta", budget=32)
+    before = trace_totals()
+    tails_before = dict(srv.catalogue.trace_counts)
+    srv.add_targets(rng.standard_normal((16, 15)).astype(np.float32))
+    srv.query(U, 5, "norm", budget=32)          # delta visible, budgeted
+    srv.catalogue.compact(wait=True)            # same-bucket compaction
+    srv.query(U, 5, "norm", budget=32)
+    srv.query(U, 5, "bta", budget=32)
+    assert trace_totals() == before
+    assert srv.catalogue.trace_counts == tails_before
+    assert srv.mutation_stats["engine_compiles_per_compaction"] == 0
+    # and the budgeted result is still certificate-correct vs the oracle
+    rows, _ = srv.catalogue.as_dense()
+    ref_vals, _ = _dense_oracle(rows, U, 5)
+    res = srv.query(U, 5, "norm", budget=32)
+    gaps = np.asarray(res.upper)[:, None] - np.asarray(res.values)
+    for q in range(U.shape[0]):
+        c = int(np.sum(gaps[q] <= 0))
+        np.testing.assert_allclose(np.asarray(res.values)[q, :c],
+                                   ref_vals[q, :c], atol=1e-4)
+
+
+def test_auto_with_budget_falls_back_to_a_budget_capable_engine():
+    rng = np.random.default_rng(12)
+    T = rng.standard_normal((300, 12)).astype(np.float32)
+    ctx = EngineContext(T, block_size=64)
+    U = jnp.asarray(rng.standard_normal((2, 12)).astype(np.float32))
+    res = get_engine("auto").run(ctx, U, K, budget=8)
+    assert res.upper is not None
+    assert not np.any(np.isnan(np.asarray(certificate_gaps(res))))

@@ -1,0 +1,303 @@
+"""Fault-injected compaction recovery (DESIGN.md §12).
+
+The recovery paths nothing exercises in the happy path, exercised: N
+consecutive background-build failures with every interleaved query still
+EXACT against the rebuild oracle, the L0 chain refolding wholesale on the
+first successful build, the chain-length cap forcing synchronous
+compaction under sustained failure, exponential-backoff gating between
+retries, the stuck-build watchdog, and the injected delta-overflow seal.
+Plus the :mod:`repro.core.faults` registry contract itself (deterministic
+seeded triggers, auto-disarm, cumulative counters).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SegmentedCatalogue, faults, get_engine
+
+R = 10
+K = 5
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.disarm_all()
+    yield
+    faults.disarm_all()
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def _base(rng, m=200):
+    return rng.standard_normal((m, R)).astype(np.float32)
+
+
+def _oracle(cat, U, k):
+    rows, gids = cat.as_dense()
+    U = np.atleast_2d(np.asarray(U, np.float32))
+    s = U.astype(np.float64) @ rows.astype(np.float64).T
+    order = np.argsort(-s, kind="stable", axis=1)[:, :k]
+    return s[np.arange(U.shape[0])[:, None], order], gids[order]
+
+
+def assert_exact(cat, U, k=K, engine="norm"):
+    res, info = cat.query(get_engine(engine), U, k)
+    ov, _ = _oracle(cat, U, k)
+    kk = min(k, cat.num_live)
+    np.testing.assert_allclose(np.asarray(res.values)[:, :kk], ov[:, :kk],
+                               atol=1e-4)
+    return res, info
+
+
+# -- the registry itself -----------------------------------------------------
+
+def test_registry_basics():
+    assert "compaction.build" in faults.list_points()
+    with pytest.raises(ValueError, match="unknown fault point"):
+        faults.arm("no.such.point")
+    with pytest.raises(ValueError, match="p must be"):
+        faults.arm("compaction.build", p=0.0)
+
+
+def test_times_auto_disarms_and_counters_survive():
+    before = faults.counters()["delta.overflow"]["fired"]
+    faults.arm("delta.overflow", times=2)
+    assert faults.fire("delta.overflow")
+    assert faults.fire("delta.overflow")
+    assert not faults.fire("delta.overflow")     # auto-disarmed
+    assert faults.counters()["delta.overflow"]["fired"] == before + 2
+
+
+def test_after_skips_initial_fires():
+    faults.arm("delta.overflow", times=1, after=2)
+    assert not faults.fire("delta.overflow")
+    assert not faults.fire("delta.overflow")
+    assert faults.fire("delta.overflow")
+
+
+def test_seeded_coin_is_deterministic():
+    def run(seed):
+        faults.arm("delta.overflow", times=None, p=0.5, seed=seed)
+        out = [faults.fire("delta.overflow") for _ in range(32)]
+        faults.disarm("delta.overflow")
+        return out
+
+    assert run(7) == run(7)
+    assert run(7) != run(8)          # astronomically unlikely to collide
+
+
+def test_injected_context_raises_and_disarms():
+    with faults.injected("compaction.build", error=faults.FaultInjected):
+        with pytest.raises(faults.FaultInjected, match="compaction.build"):
+            faults.fire("compaction.build")
+    assert not faults.fire("compaction.build")
+
+
+# -- mutation input validation ----------------------------------------------
+
+def test_mutations_reject_nonfinite_and_wrong_rank():
+    rng = _rng(1)
+    cat = SegmentedCatalogue(_base(rng), block_size=16)
+    bad = np.ones((2, R), np.float32)
+    bad[1, 3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        cat.add_targets(bad)
+    with pytest.raises(ValueError, match="rank mismatch"):
+        cat.add_targets(np.ones((2, R + 1), np.float32))
+    inf_row = np.full((1, R), np.inf, np.float32)
+    with pytest.raises(ValueError, match="non-finite"):
+        cat.update_targets([0], inf_row)
+    with pytest.raises(ValueError, match="rank mismatch"):
+        cat.update_targets([0], np.ones((1, R - 2), np.float32))
+    # the failed validations mutated NOTHING
+    assert cat.num_live == 200 and cat.delta_occupancy == 0
+
+
+# -- repeated build failure: exactness + recovery ----------------------------
+
+def test_n_consecutive_build_failures_serve_exact_then_refold():
+    """The acceptance scenario: inject N consecutive build faults; every
+    interleaved query must stay exact vs the rebuild oracle; the first
+    successful build refolds the accumulated L0 chain wholesale; the
+    recovery counters tell the story in mutation_stats terms."""
+    rng = _rng(2)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=8, block_size=16,
+                             compact_async=True, max_l0_segments=16,
+                             build_backoff_s=0.01)
+    U = rng.standard_normal((3, R)).astype(np.float32)
+    n_faults = 4
+    faults.arm("compaction.build", error=RuntimeError, times=n_faults)
+    for i in range(n_faults):
+        cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+        cat.flush()                       # this round's build FAILED
+        assert_exact(cat, U)              # ... and queries never notice
+        if cat.consecutive_build_failures >= 2:
+            time.sleep(cat.current_backoff_s + 0.01)  # let retries through
+    assert cat.stats.n_failed_compactions == n_faults
+    assert cat.consecutive_build_failures == n_faults
+    assert isinstance(cat.last_build_error, RuntimeError)
+    chain_before = cat.l0_chain_len
+    assert chain_before >= 2              # failures really accumulated L0
+    assert cat.stats.max_l0_chain >= chain_before
+    # fault exhausted: the next (forced) compaction succeeds and refolds
+    # the WHOLE chain in one build
+    cat.compact(wait=True)
+    assert cat.l0_chain_len == 0
+    assert cat.last_build_error is None   # stale failure state cleared
+    assert cat.consecutive_build_failures == 0
+    assert cat.current_backoff_s == 0.0
+    assert cat.stats.n_compactions == 1
+    assert cat.stats.n_build_retries >= 1
+    assert_exact(cat, U)
+
+
+def test_chain_cap_forces_synchronous_compaction():
+    """Past max_l0_segments the mutating caller pays: a forced SYNC build
+    folds the chain inline instead of letting queries degrade without
+    bound. With the builder healthy again, the cap holds the chain."""
+    rng = _rng(3)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=4, block_size=16,
+                             compact_async=True, max_l0_segments=2,
+                             build_backoff_s=5.0)  # backoff would stall...
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    # 2 failures start the backoff clock (5s: no ordinary retry fires)
+    faults.arm("compaction.build", error=RuntimeError, times=2)
+    for _ in range(2):
+        cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+        cat.flush()
+    assert cat.stats.n_failed_compactions == 2
+    # ...but the chain cap outranks the backoff: growing the chain past 2
+    # forces sync folds NOW
+    for _ in range(4):
+        cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+    assert cat.l0_chain_len <= 2
+    assert cat.stats.n_forced_sync_compactions >= 1
+    assert cat.stats.n_compactions >= 1
+    assert cat.consecutive_build_failures == 0
+    assert_exact(cat, U)
+
+
+def test_backoff_gates_ordinary_retries():
+    """First failure retries at the next trigger; from the second on,
+    triggers inside the backoff window are skipped (no attempt, no new
+    failure), and an attempt past the window goes through."""
+    rng = _rng(4)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=64, block_size=16,
+                             compact_async=False, max_l0_segments=32,
+                             build_backoff_s=0.25, build_backoff_max_s=1.0)
+    row = rng.standard_normal((1, R)).astype(np.float32)
+    cat.add_targets(row)              # non-empty delta: seals really seal
+    faults.arm("compaction.build", error=RuntimeError, times=2)
+    with faults.injected("delta.overflow", times=3):
+        cat.add_targets(row)          # overflow seal -> build fails (#1)
+        assert cat.consecutive_build_failures == 1
+        cat.add_targets(row)          # immediate retry allowed -> fails (#2)
+        assert cat.consecutive_build_failures == 2
+        assert cat.current_backoff_s == pytest.approx(0.5)  # 0.25 * 2
+        cat.add_targets(row)          # inside the window: GATED
+        assert cat.stats.n_failed_compactions == 2          # no attempt
+    time.sleep(cat.current_backoff_s + 0.05)
+    with faults.injected("delta.overflow", times=1):
+        cat.add_targets(row)          # past the window (fault exhausted)
+    assert cat.consecutive_build_failures == 0
+    assert cat.l0_chain_len == 0
+    assert cat.stats.n_build_retries >= 1
+
+
+def test_retry_limit_stops_ordinary_attempts_but_not_forced():
+    rng = _rng(5)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=64, block_size=16,
+                             compact_async=False, max_l0_segments=32,
+                             build_retry_limit=1, build_backoff_s=0.0)
+    row = rng.standard_normal((1, R)).astype(np.float32)
+    cat.add_targets(row)              # non-empty delta: seals really seal
+    faults.arm("compaction.build", error=RuntimeError, times=10)
+    with faults.injected("delta.overflow", times=4):
+        cat.add_targets(row)                      # fail #1
+        cat.add_targets(row)                      # retry (limit 1) -> #2
+        fails = cat.stats.n_failed_compactions
+        assert fails == 2
+        cat.add_targets(row)                      # past limit: no attempt
+        cat.add_targets(row)
+        assert cat.stats.n_failed_compactions == fails
+    with pytest.raises(RuntimeError, match="compaction build failed"):
+        cat.compact(wait=True)                    # force still attempts
+    assert cat.stats.n_failed_compactions == fails + 1
+    faults.disarm_all()
+    cat.compact(wait=True)                        # and force can heal
+    assert cat.consecutive_build_failures == 0
+
+
+def test_watchdog_flags_stuck_build_once():
+    rng = _rng(6)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=8, block_size=16,
+                             compact_async=True, build_watchdog_s=0.05)
+    faults.arm("compaction.stall", delay_s=0.4)
+    cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+    deadline = time.monotonic() + 2.0
+    flagged = False
+    while time.monotonic() < deadline and not flagged:
+        flagged = cat.check_watchdog()
+        time.sleep(0.02)
+    assert flagged                        # the stall WAS detected...
+    assert cat.stats.n_stuck_builds == 1
+    cat.check_watchdog()
+    assert cat.stats.n_stuck_builds == 1  # ...and counted once per build
+    cat.flush()                           # detection only: build finishes
+    assert cat.stats.n_compactions == 1
+    assert cat.l0_chain_len == 0
+
+
+def test_warm_phase_failure_is_a_recorded_build_failure():
+    rng = _rng(7)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=8, block_size=16,
+                             compact_async=False)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    with faults.injected("compaction.warm", error=RuntimeError):
+        cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+    assert cat.stats.n_failed_compactions == 1
+    assert cat.l0_chain_len >= 1
+    assert_exact(cat, U)
+    cat.compact(wait=True)
+    assert cat.last_build_error is None
+    assert_exact(cat, U)
+
+
+def test_injected_delta_overflow_seals_early():
+    rng = _rng(8)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=64, block_size=16,
+                             compact_async=False)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    cat.add_targets(rng.standard_normal((2, R)).astype(np.float32))
+    with faults.injected("delta.overflow", times=1):
+        cat.add_targets(rng.standard_normal((4, R)).astype(np.float32))
+    # the injected overflow forced a seal + compaction long before the
+    # 64-row capacity
+    assert cat.stats.n_compactions == 1
+    assert cat.num_live == 206
+    assert_exact(cat, U)
+
+
+def test_auto_retry_timer_heals_a_quiet_catalogue():
+    """auto_retry=True: after a failed async build the catalogue retries
+    by itself (backoff-spaced) with NO further mutations or queries."""
+    rng = _rng(9)
+    cat = SegmentedCatalogue(_base(rng), delta_capacity=8, block_size=16,
+                             compact_async=True, auto_retry=True,
+                             build_backoff_s=0.05)
+    with faults.injected("compaction.build", error=RuntimeError, times=1):
+        cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+        cat.flush()
+    assert cat.stats.n_failed_compactions == 1
+    assert cat.retry_pending
+    deadline = time.monotonic() + 3.0
+    while time.monotonic() < deadline and cat.l0_chain_len:
+        time.sleep(0.02)
+    cat.flush()
+    assert cat.l0_chain_len == 0          # healed hands-off
+    assert cat.consecutive_build_failures == 0
+    assert cat.stats.n_compactions == 1

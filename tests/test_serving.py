@@ -231,3 +231,105 @@ def test_server_host_oracle_methods():
         r = srv.query(U, 5, oracle)
         np.testing.assert_allclose(np.sort(r.values, axis=1),
                                    np.sort(r_ta.values, axis=1), atol=1e-4)
+
+
+def test_admission_ladder_downgrades_and_records():
+    """With a deadline too tight for the preferred engine (per the cost
+    model) the server walks the ladder — norm, then budgeted norm — and
+    records every decision under the REQUESTED method."""
+    from repro.serving.server import AdmissionPolicy
+    rng = np.random.default_rng(30)
+    model = random_model(rng, 600, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64,
+                     policy=AdmissionPolicy(degrade_budget=16))
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    ref = srv.query(U, 5, "naive")
+    # deterministic cost model: bta "slow", norm fast
+    srv._cost_ewma.update({"bta": 10.0, "norm": 1e-9})
+    res = srv.query(U, 5, "bta", deadline_ms=50.0)
+    assert srv.stats["bta"].degradations == {"to_norm": 1}
+    # the downgraded rung is still EXACT (norm is an exact engine)
+    np.testing.assert_allclose(np.sort(res.values, axis=1),
+                               np.sort(ref.values, axis=1), atol=1e-4)
+    assert srv.stats["norm"].n_queries == 8      # served by norm
+    # now norm is also "slow": budgeted rung, certificates mandatory
+    srv._cost_ewma.update({"norm": 10.0})
+    res = srv.query(U, 5, "bta", deadline_ms=50.0)
+    assert srv.stats["bta"].degradations["to_budgeted"] == 1
+    assert res.upper is not None
+    gaps = np.asarray(res.upper)[:, None] - np.asarray(res.values)
+    certified = gaps <= 0
+    # certified slots are a prefix of the true top-K
+    ov = np.sort(np.asarray(ref.values), axis=1)[:, ::-1]
+    for q in range(U.shape[0]):
+        c = int(np.sum(certified[q]))
+        np.testing.assert_allclose(np.asarray(res.values)[q, :c],
+                                   ov[q, :c], atol=1e-4)
+
+
+def test_expired_deadline_sheds_with_sentinels():
+    from repro.serving.server import AdmissionPolicy
+    rng = np.random.default_rng(31)
+    model = random_model(rng, 400, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64)
+    U = rng.standard_normal((10, 16)).astype(np.float32)
+    res = srv.query(U, 5, "norm", deadline_ms=0.0)
+    assert np.all(np.asarray(res.indices) == -1)
+    assert np.all(np.asarray(res.values) == -np.inf)
+    assert np.all(np.asarray(res.upper) == np.inf)   # nothing certified
+    assert srv.stats["norm"].degradations["shed"] == 2   # both chunks
+    assert srv.stats["norm"].n_uncertified == 10
+    # shed_on_overload=False: the expired deadline downgrades instead
+    srv.policy.shed_on_overload = False
+    res = srv.query(U, 5, "norm", deadline_ms=0.0)
+    assert np.all(np.asarray(res.indices)[:, 0] >= 0)    # real answers
+    assert srv.stats["norm"].degradations["to_budgeted"] == 2
+
+
+def test_overload_sheds_at_max_inflight():
+    from repro.serving.server import AdmissionPolicy
+    rng = np.random.default_rng(32)
+    model = random_model(rng, 400, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64,
+                     policy=AdmissionPolicy(max_inflight=0))
+    U = rng.standard_normal((4, 16)).astype(np.float32)
+    res = srv.query(U, 5, "norm")          # 0 slots: immediate shed
+    assert np.all(np.asarray(res.indices) == -1)
+    assert srv.stats["norm"].degradations["shed"] == 1
+    srv.policy.max_inflight = 8
+    res = srv.query(U, 5, "norm")          # slots again: served
+    assert np.all(np.asarray(res.indices)[:, 0] >= 0)
+
+
+def test_no_deadline_path_is_unchanged_and_fully_certified():
+    """Without a deadline the ladder never engages; exact engines report
+    full certification through the server API."""
+    rng = np.random.default_rng(33)
+    model = random_model(rng, 500, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64)
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    res = srv.query(U, 5, "norm")
+    assert srv.stats["norm"].degradations == {}
+    gaps = np.asarray(res.upper)[:, None] - np.asarray(res.values)
+    assert np.all(gaps <= 0)
+    assert srv.stats["norm"].n_uncertified == 0
+
+
+def test_server_budget_reaches_mutated_catalogue():
+    """Explicit budgets work on the segmented path too: certificates stay
+    valid (prefix-exact) with a live delta and tombstones."""
+    rng = np.random.default_rng(34)
+    model = random_model(rng, 500, 16, "lowrank_spectrum")
+    srv = TopKServer(model, max_batch=8, block_size=64, delta_capacity=16)
+    U = rng.standard_normal((8, 16)).astype(np.float32)
+    srv.add_targets(rng.standard_normal((5, 16)).astype(np.float32))
+    srv.delete_targets([0, 1])
+    res = srv.query(U, 5, "norm", budget=4)
+    ref = srv.query(U, 5, "naive")
+    gaps = np.asarray(res.upper)[:, None] - np.asarray(res.values)
+    ov = np.asarray(ref.values)
+    for q in range(U.shape[0]):
+        c = int(np.sum(gaps[q] <= 0))
+        np.testing.assert_allclose(np.asarray(res.values)[q, :c],
+                                   ov[q, :c], atol=1e-4)
+    assert srv.stats["norm"].n_uncertified >= 0  # counter exists and sane
