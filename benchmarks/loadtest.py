@@ -1,0 +1,324 @@
+"""Closed-loop load test: offered QPS sweep against the async pipeline.
+
+Measures the serving claim of DESIGN.md §13 end to end: a synchronous
+call-per-request baseline (one engine dispatch per arriving query, the
+pre-PR-8 serving shape) against :class:`AsyncTopKServer`'s deadline-
+coalesced micro-batching, at the same catalogue and the same exactness
+bar. For each offered rate the harness submits on an open-loop arrival
+schedule, blocks until every request completes, verifies every result
+against a float64 oracle, and reports completed QPS (goodput — every
+row is exact, so goodput IS throughput), per-request p50/p95/p99, the
+coalesced-batch-size histogram, and the cache hit rate. Two derived
+numbers are the acceptance gates:
+
+* ``speedup_at_saturation`` — completed QPS at the saturating offered
+  rate over the sync baseline's QPS: coalescing must win >= 3x.
+* ``low_qps_p99_ratio`` — async p99 at the LOW offered rate over the
+  sync p99: the idle-pipeline immediate flush must keep it <= 2x (a
+  lone request must not wait out ``flush_ms`` for company that is not
+  coming).
+
+A final streaming phase mutates the catalogue under query load (enough
+appends to force compactions, plus deletes), asserting post-mutation
+exactness (the result cache must never serve a pre-mutation answer)
+and zero engine compiles per compaction through the async path.
+
+``--quick`` shrinks M and the durations for the CI tier-2 smoke;
+``--check`` exits non-zero when a SOUNDNESS gate fails (exactness,
+cache staleness, compile-free compaction — CI runs both flags), while
+``--check-perf`` additionally gates the two wall-clock criteria (for
+artifact generation on a quiet machine; shared-runner clocks are too
+noisy to gate CI on). The committed ``results/bench/loadtest.json`` is
+the full-size artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import queue
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import save_rows
+
+
+def _oracle_topk(T: np.ndarray, pool: np.ndarray, k: int) -> np.ndarray:
+    out = np.empty((pool.shape[0], k), np.float64)
+    Td = T.astype(np.float64).T
+    for i in range(0, pool.shape[0], 2048):
+        s = pool[i:i + 2048].astype(np.float64) @ Td
+        out[i:i + 2048] = np.sort(s, axis=1)[:, ::-1][:, :k]
+    return out
+
+
+def _percentiles_ms(lat_s):
+    a = 1e3 * np.asarray(lat_s, np.float64)
+    return (float(np.percentile(a, 50)), float(np.percentile(a, 95)),
+            float(np.percentile(a, 99)))
+
+
+def run_sync(srv, pool, oracle, k, duration_s, method):
+    """Call-per-request baseline: one blocking query() per arrival."""
+    # burn-in (discarded): the first calls after warmup carry
+    # allocator/dispatch stragglers the steady state never sees
+    for i in range(32):
+        srv.query(pool[i % pool.shape[0]], k, method=method)
+    lat, n_bad, i = [], 0, 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < duration_s:
+        q = pool[i % pool.shape[0]]
+        t1 = time.perf_counter()
+        res = srv.query(q, k, method=method)
+        lat.append(time.perf_counter() - t1)
+        if not np.allclose(np.asarray(res.values)[0],
+                           oracle[i % pool.shape[0]], atol=1e-3):
+            n_bad += 1
+        i += 1
+    wall = time.perf_counter() - t0
+    p50, p95, p99 = _percentiles_ms(lat)
+    return {"mode": "sync", "offered_qps": None, "n": i,
+            "completed_qps": i / wall, "p50_ms": p50, "p95_ms": p95,
+            "p99_ms": p99, "exact_verified": n_bad == 0,
+            "mean_batch_size": 1.0, "cache_hit_rate": 0.0}
+
+
+def run_async(srv, pool, oracle, k, qps, duration_s, method,
+              n_waiters=None, tag="async", n=None):
+    """Open-loop arrivals at ``qps`` for ``duration_s``; waits for every
+    completion (the closed loop), verifying each against the oracle.
+
+    The waiter pool scales with the offered rate: a fixed large pool
+    would idle-spin thread wakeups through the GIL at a low-QPS trickle
+    and inflate exactly the tail the low-load gate measures, while a
+    tiny pool would serialise completions at saturation."""
+    if n is None:
+        n = max(int(qps * duration_s), 1)
+    if n_waiters is None:
+        n_waiters = max(2, min(16, int(qps) // 50 + 2))
+    done_q: "queue.Queue" = queue.Queue()
+    done, lock = [], threading.Lock()
+
+    def waiter():
+        # record completion time and the values row only — oracle
+        # verification happens AFTER the timed window, so its cost
+        # never pollutes the latency/throughput measurement
+        while True:
+            item = done_q.get()
+            if item is None:
+                return
+            idx, t_submit, h = item
+            res = h.result()
+            t_done = time.perf_counter()
+            with lock:
+                done.append((idx, t_done - t_submit,
+                             np.asarray(res.values)[0]))
+
+    waiters = [threading.Thread(target=waiter, daemon=True)
+               for _ in range(n_waiters)]
+    for w in waiters:
+        w.start()
+    hits0, miss0 = srv.cache.hits, srv.cache.misses
+    batches0 = srv.pipeline_stats.n_batches
+    reqs0 = srv.pipeline_stats.n_requests
+    t0 = time.perf_counter()
+    for i in range(n):
+        target = t0 + i / qps
+        delay = target - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        idx = i % pool.shape[0]
+        t_submit = time.perf_counter()
+        done_q.put((idx, t_submit, srv.submit(pool[idx], k,
+                                              method=method)))
+    for _ in waiters:
+        done_q.put(None)
+    for w in waiters:
+        w.join()
+    wall = time.perf_counter() - t0
+    lat = [d[1] for d in done]
+    bad = [d[0] for d in done
+           if not np.allclose(d[2], oracle[d[0]], atol=1e-3)]
+    p50, p95, p99 = _percentiles_ms(lat)
+    hits = srv.cache.hits - hits0
+    misses = srv.cache.misses - miss0
+    n_batches = srv.pipeline_stats.n_batches - batches0
+    n_reqs = srv.pipeline_stats.n_requests - reqs0
+    return {"mode": tag, "offered_qps": qps, "n": n,
+            "completed_qps": n / wall, "p50_ms": p50, "p95_ms": p95,
+            "p99_ms": p99, "exact_verified": not bad,
+            "mean_batch_size": (n_reqs - hits) / max(n_batches, 1),
+            "cache_hit_rate": hits / max(hits + misses, 1)}
+
+
+def run_streaming_phase(srv, T, k, method, n_adds=96):
+    """Mutations under the async path: appended rows must surface in
+    the very next query (no stale cache), compactions must stay
+    compile-free, deletes must vanish exactly."""
+    rng = np.random.default_rng(7)
+    rank = T.shape[1]
+    stale = 0
+    for i in range(n_adds):
+        u = rng.standard_normal(rank).astype(np.float32)
+        big = (10.0 + i) * u / max(float(np.linalg.norm(u)), 1e-9)
+        # prime the cache with this query, then mutate, then re-query:
+        # the add must be visible immediately
+        srv.query(u, k, method=method)
+        gid = int(srv.add_targets(big[None])[0])
+        res = srv.query(u, k, method=method)
+        if int(np.asarray(res.indices)[0, 0]) != gid:
+            stale += 1
+        srv.delete_targets([gid])
+        res2 = srv.query(u, k, method=method)
+        if gid in set(np.asarray(res2.indices)[0].tolist()):
+            stale += 1
+    ms = srv.mutation_stats
+    return {"mode": "streaming", "n": n_adds,
+            "n_compactions": ms["n_compactions"],
+            "engine_compiles_per_compaction":
+                ms["engine_compiles_per_compaction"],
+            "exact_verified": stale == 0,
+            "cache_hit_rate": srv.cache.hits
+                / max(srv.cache.hits + srv.cache.misses, 1)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small M / short durations (CI tier-2 smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if a SOUNDNESS gate fails (exactness, "
+                         "cache staleness, compile-free compaction) — "
+                         "what CI runs; wall-clock gates stay off "
+                         "because shared-runner clocks are noise")
+    ap.add_argument("--check-perf", action="store_true",
+                    help="additionally gate the throughput/latency "
+                         "criteria (>=3x saturated speedup, low-QPS "
+                         "p99 <= 2x sync) — for artifact generation "
+                         "on a quiet machine")
+    ap.add_argument("--method", default="auto")
+    args = ap.parse_args(argv)
+
+    from repro.core import SepLRModel
+    from repro.serving.pipeline import AsyncTopKServer
+    from repro.serving.server import TopKServer
+
+    # full-size M puts the run in the regime the async tier is FOR:
+    # the per-query scan cost dominates the host-side per-request
+    # overhead (~0.6ms on this 1-core box), so coalescing's win is
+    # structural rather than marginal
+    M = 4096 if args.quick else 65536
+    R, k, pool_n = 32, 10, 512
+    dur = 1.0 if args.quick else 3.0
+    max_batch = 64
+    rng = np.random.default_rng(0)
+    T = rng.standard_normal((M, R)).astype(np.float32)
+    pool = rng.standard_normal((pool_n, R)).astype(np.float32)
+    oracle = _oracle_topk(T, pool, k)
+    meta = {"M": M, "R": R, "k": k, "method": args.method,
+            "max_batch": max_batch}
+
+    print(f"# loadtest M={M} k={k} method={args.method}", flush=True)
+    sync_srv = TopKServer(SepLRModel(T), max_batch=max_batch,
+                          delta_capacity=64)
+    sync_srv.warmup(k)
+    sync_row = dict(run_sync(sync_srv, pool, oracle, k, dur,
+                             args.method), **meta)
+    print(f"sync: {sync_row['completed_qps']:.0f} qps "
+          f"p99={sync_row['p99_ms']:.2f}ms", flush=True)
+
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=max_batch,
+                          delta_capacity=64, method=args.method)
+    srv.warmup(k)
+    rows = [sync_row]
+    sync_qps = sync_row["completed_qps"]
+    with srv:
+        # burn-in (discarded): first-dispatch stragglers — thread
+        # wake-up, allocator warmth — must not pollute the low-QPS p99
+        burn = rng.standard_normal((64, R)).astype(np.float32)
+        run_async(srv, burn, _oracle_topk(T, burn, k), k,
+                  max(0.5 * sync_qps, 1.0), 0.5, args.method, n=64)
+        # offered-rate sweep: fractions of the sync baseline up to a
+        # saturating 8x (the open loop outruns the device there; the
+        # closed-loop completion rate is the saturated throughput).
+        # Every request in a sweep phase is a UNIQUE query — the cache
+        # cannot contribute, so completed QPS measures coalescing alone
+        for frac in (0.2, 1.0, 3.0, 8.0):
+            qps = max(frac * sync_qps, 1.0)
+            # the low-QPS phase runs twice as long: its p99 is a GATED
+            # number and a 3s trickle yields too few samples for a
+            # stable tail estimate
+            phase_dur = 2 * dur if frac < 1.0 else dur
+            n = min(max(int(qps * phase_dur), 200), 20000)
+            qs = rng.standard_normal((n, R)).astype(np.float32)
+            row = dict(run_async(srv, qs, _oracle_topk(T, qs, k), k,
+                                 qps, phase_dur, args.method, n=n), **meta)
+            rows.append(row)
+            print(f"async offered={qps:.0f}: "
+                  f"{row['completed_qps']:.0f} qps "
+                  f"p99={row['p99_ms']:.2f}ms "
+                  f"B={row['mean_batch_size']:.1f}", flush=True)
+        # hot-set phase: 32 distinct queries cycled — steady-state cache
+        # hit rate (the head-query cache earning its keep)
+        hot = pool[:32]
+        row = dict(run_async(srv, hot, oracle[:32], k,
+                             max(sync_qps, 50.0), dur, args.method,
+                             tag="async_hot"), **meta)
+        rows.append(row)
+        print(f"hot-set: hit_rate={row['cache_hit_rate']:.2f}", flush=True)
+        stream_row = dict(run_streaming_phase(srv, T, k, args.method),
+                          **meta)
+        rows.append(stream_row)
+        print(f"streaming: compactions={stream_row['n_compactions']} "
+              f"compiles/compaction="
+              f"{stream_row['engine_compiles_per_compaction']}",
+              flush=True)
+
+    low = next(r for r in rows if r["mode"] == "async"
+               and r["offered_qps"] <= 0.3 * sync_qps)
+    sat = max((r for r in rows if r["mode"] == "async"),
+              key=lambda r: r["completed_qps"])
+    summary = {
+        "mode": "summary", **meta,
+        "sync_qps": sync_qps,
+        "saturated_qps": sat["completed_qps"],
+        "speedup_at_saturation": sat["completed_qps"] / sync_qps,
+        "low_qps_p99_ms": low["p99_ms"],
+        "sync_p99_ms": sync_row["p99_ms"],
+        "low_qps_p99_ratio": low["p99_ms"]
+            / max(sync_row["p99_ms"], 1e-9),
+        "exact_verified": all(r["exact_verified"] for r in rows),
+        "engine_compiles_per_compaction":
+            stream_row["engine_compiles_per_compaction"],
+    }
+    rows.append(summary)
+    save_rows("loadtest", rows)
+    print(f"speedup_at_saturation={summary['speedup_at_saturation']:.2f}x"
+          f"  low_qps_p99_ratio={summary['low_qps_p99_ratio']:.2f}x",
+          flush=True)
+
+    failures = []
+    if args.check or args.check_perf:
+        if not summary["exact_verified"]:
+            failures.append("a served result diverged from the oracle "
+                            "(or a cached result went stale)")
+        if summary["engine_compiles_per_compaction"] != 0:
+            failures.append("compaction retraced engines on the async "
+                            "path")
+    if args.check_perf:
+        if summary["speedup_at_saturation"] < 3.0:
+            failures.append(
+                f"saturated speedup {summary['speedup_at_saturation']:.2f}"
+                "x < 3x")
+        if summary["low_qps_p99_ratio"] > 2.0:
+            failures.append(
+                f"low-QPS p99 {summary['low_qps_p99_ratio']:.2f}x sync "
+                "> 2x")
+    for f in failures:
+        print(f"GATE FAILED: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

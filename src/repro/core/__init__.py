@@ -33,6 +33,7 @@ from repro.core.driver import (
     pruned_block_scan,
 )
 from repro.core.engines import (
+    CostTable,
     Engine,
     EngineContext,
     batch_bucket,
@@ -116,6 +117,7 @@ __all__ = [
     "ta_round_strategy", "blocked_lists_strategy", "list_prefix_strategy",
     "rank_gather_first_keys", "norm_block_strategy",
     "Engine", "EngineContext", "register_engine", "get_engine",
+    "CostTable",
     "list_engines", "engine_names", "select_engine", "batch_bucket",
     # layout subsystem
     "RowMajorLayout", "NormMajorLayout", "ListMajorLayout",

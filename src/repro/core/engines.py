@@ -94,6 +94,8 @@ Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -187,6 +189,78 @@ def trace_detail() -> Dict[Tuple[str, tuple], int]:
     return dict(_TRACE_DETAIL)
 
 
+class CostTable:
+    """Measured per-(engine, batch-bucket, sign-bucket) serve cost.
+
+    An EWMA (default ``alpha=0.2``) of observed per-QUERY seconds, keyed
+    by the same axes the compile cache specialises on — engine name,
+    power-of-two batch bucket, sign-bucket label — so a router can ask
+    "what does THIS engine cost for THIS batch shape" instead of
+    guessing from nnz alone. Engines without batch specialisation record
+    under the empty label. ``engine_cost`` aggregates across shapes (an
+    EWMA over every observation for the engine) — the admission ladder's
+    coarse view; :meth:`predict` is the granular one the serving router
+    uses, falling back label -> engine-aggregate unless
+    ``granular_only=True`` (routing must not substitute a B=64 cost for
+    a B=1 decision).
+
+    Thread-safe: the serving pipeline's harvester thread records while
+    dispatchers read. Budgeted variants record under the
+    ``"<engine>@budget"`` name, same convention as the PR-7 ladder.
+
+    :meth:`EngineContext.warmup` PRIMES the table — one timed run per
+    warmed (engine, bucket, sign) AFTER its compile — so the first real
+    queries after a warmup are routed and admitted from measurements,
+    never from the "optimistic when unseen" default.
+    """
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._ewma: Dict[Tuple[str, int, str], float] = {}
+        self._engine: Dict[str, float] = {}
+        self.n_observations = 0
+
+    def observe(self, engine: str, bucket: int, label: str,
+                per_query_s: float) -> None:
+        """Fold one measured per-query latency into the table."""
+        key = (engine, int(bucket), label)
+        a = self.alpha
+        with self._lock:
+            prev = self._ewma.get(key)
+            self._ewma[key] = (per_query_s if prev is None
+                               else (1 - a) * prev + a * per_query_s)
+            prev_e = self._engine.get(engine)
+            self._engine[engine] = (per_query_s if prev_e is None
+                                    else (1 - a) * prev_e + a * per_query_s)
+            self.n_observations += 1
+
+    def predict(self, engine: str, bucket: int, label: str,
+                granular_only: bool = False) -> Optional[float]:
+        """Predicted per-query seconds, or None when nothing relevant was
+        ever measured. Falls back (engine, bucket, label) ->
+        (engine, bucket, "") -> engine aggregate unless granular_only."""
+        with self._lock:
+            c = self._ewma.get((engine, int(bucket), label))
+            if c is None:
+                c = self._ewma.get((engine, int(bucket), ""))
+            if c is None and not granular_only:
+                c = self._engine.get(engine)
+            return c
+
+    def engine_cost(self, engine: str) -> Optional[float]:
+        """Shape-agnostic per-query seconds for ``engine`` (EWMA over
+        every observation), or None if never measured."""
+        with self._lock:
+            return self._engine.get(engine)
+
+    def snapshot(self) -> Dict[str, float]:
+        """``"engine|bucket|label" -> seconds`` view for artifacts."""
+        with self._lock:
+            return {f"{e}|{b}|{lbl}": v
+                    for (e, b, lbl), v in sorted(self._ewma.items())}
+
+
 #: engine name -> the module-level jitted executor
 #: ``(args, U, *, k, cfg) -> TopKResult``. ONE executor per engine for
 #: the whole process: jax's own trace cache (keyed by arg shapes/dtypes/
@@ -239,8 +313,14 @@ class EngineContext:
     def __init__(self, targets, index: Optional[TopKIndex] = None,
                  block_size: int = 256, max_blocks: int = -1,
                  interpret=None, ta_chunk: int = 32,
-                 prefix_depth: Optional[int] = None, version: int = 0):
+                 prefix_depth: Optional[int] = None, version: int = 0,
+                 cost_table: Optional["CostTable"] = None):
         self.targets = jnp.asarray(targets, dtype=jnp.float32)
+        # measured-cost table shared ACROSS contexts (the serving tier
+        # passes one table through every compaction-built snapshot, so
+        # observations survive snapshot swaps); select_engine consults
+        # it when present and falls back to the cold heuristic otherwise
+        self.cost_table = cost_table
         self.block_size = block_size
         self.max_blocks = max_blocks
         self.interpret = interpret
@@ -539,7 +619,9 @@ class EngineContext:
 
     def warmup(self, k: int, batch_sizes=(1, 8, 64),
                engines: Optional[List[str]] = None,
-               m_buckets=None, budgets=None) -> "EngineContext":
+               m_buckets=None, budgets=None,
+               cost_table: Optional["CostTable"] = None
+               ) -> "EngineContext":
         """Compile (engine, k, batch-bucket, M-bucket) executables ahead
         of traffic.
 
@@ -567,7 +649,14 @@ class EngineContext:
         server that degrades to budgeted certified scans under load never
         compiles on the hot path — and, like every other argument-passing
         variant, the budgeted traces survive compaction (DESIGN.md §12).
-        Returns self for chaining.
+
+        ``cost_table`` (default: the context's own, if any) is PRIMED
+        while warming: each warmed (engine, batch-bucket, sign) config at
+        the CURRENT M-bucket gets one extra timed run AFTER its compile,
+        recorded as that config's measured per-query cost — so the
+        serving router and the admission ladder start from measurements
+        instead of the optimistic unseen default. Returns self for
+        chaining.
         """
         names = list(engines) if engines is not None else [
             e.name for e in list_engines() if e.has_executable]
@@ -578,6 +667,7 @@ class EngineContext:
         else:
             buckets_m = sorted({max(int(x), own) for x in m_buckets})
         budget_list = [None] + [int(x) for x in (budgets or ())]
+        ct = cost_table if cost_table is not None else self.cost_table
         for name in names:
             eng = get_engine(name)
             if eng.run_args is not None:
@@ -591,13 +681,33 @@ class EngineContext:
                                 res = self._dispatch_args(eng, args, U, k,
                                                           budget=bud)
                                 jax.block_until_ready(res.values)
+                                if ct is not None and mb == own:
+                                    self._time_into(ct, eng, args, U, k,
+                                                    bud, bucket)
             else:
                 for b in batch_sizes:
                     bucket = batch_bucket(b)
                     U = jnp.ones((bucket, r), self.targets.dtype)
-                    res = self.compiled(eng, int(k), bucket)(U)
-                    jax.block_until_ready(res.values)
+                    fn = self.compiled(eng, int(k), bucket)
+                    jax.block_until_ready(fn(U).values)
+                    if ct is not None:
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(fn(U).values)
+                        ct.observe(eng.name, bucket, "",
+                                   (time.perf_counter() - t0) / bucket)
         return self
+
+    def _time_into(self, ct: "CostTable", eng: "Engine", args, U, k,
+                   bud, bucket: int) -> None:
+        """One timed (post-compile) run, folded into the cost table under
+        the same (engine, bucket, sign-label) key serving records use —
+        budgeted variants under the ladder's ``"<name>@budget"`` name."""
+        t0 = time.perf_counter()
+        res = self._dispatch_args(eng, args, U, k, budget=bud)
+        jax.block_until_ready(res.values)
+        dt = time.perf_counter() - t0
+        name = eng.name if bud is None else f"{eng.name}@budget"
+        ct.observe(name, bucket, cost_label(eng, self, U), dt / bucket)
 
     def _warm_batches(self, eng: "Engine", bucket: int, r: int) -> list:
         """Representative warm batches: one per sign bucket the engine
@@ -976,27 +1086,75 @@ def _host_nnz_frac(U) -> float:
     return float(np.count_nonzero(arr)) / max(arr.size, 1)
 
 
-#: batch size at which the batched-native list scan amortises its shared
-#: tile enumeration well enough to prefer the list engines (DESIGN.md §11)
+#: COLD-START batch size at which the batched-native list scan is assumed
+#: to amortise its shared tile enumeration well enough to prefer the list
+#: engines (DESIGN.md §11). Once a :class:`CostTable` has measurements
+#: for every auto candidate at the batch's (bucket, sign), the measured
+#: costs replace this constant entirely (ROADMAP item 3c).
 BATCHED_LIST_MIN_B = 8
 
 
-def select_engine(ctx: EngineContext, U) -> Engine:
+def cost_label(eng: Engine, ctx: EngineContext, U) -> str:
+    """The sign-bucket label ``eng`` would serve ``U`` under — the
+    third axis of every :class:`CostTable` key, shared by warm-time
+    priming and serve-time recording so the two can never disagree.
+    Empty for engines without batch specialisation (and for the list
+    engines while the layout is off, where every batch shares one
+    trace)."""
+    if eng.batch_config is None:
+        return ""
+    bcfg = eng.batch_config(ctx, U)
+    return sign_bucket_label(bcfg) if bcfg else ""
+
+
+def _select_by_cost(ctx: EngineContext, arr, bucket: int,
+                    ct: CostTable) -> Optional[Engine]:
+    """Measured-cost route: the cheapest auto candidate at this batch's
+    (bucket, sign) — or None unless EVERY candidate has a granular
+    measurement (an unmeasured engine is an unwarmed engine; dispatching
+    to it on a hunch would compile on the hot path, and comparing a
+    measurement against the optimistic unseen default is not a
+    comparison)."""
+    best, best_c = None, None
+    for name in auto_candidates():
+        eng = get_engine(name)
+        c = ct.predict(name, bucket, cost_label(eng, ctx, arr),
+                       granular_only=True)
+        if c is None:
+            return None
+        if best_c is None or c < best_c:
+            best, best_c = eng, c
+    return best
+
+
+def select_engine(ctx: EngineContext, U,
+                  cost_table: Optional[CostTable] = None) -> Engine:
     """The ``auto`` policy: pick an engine for this query batch.
 
-    Decides from three cheap HOST-side statistics: batch sparsity
-    ``nnz(u)`` (sparse queries make TA's per-round cost collapse to the
-    active lists), the BATCH SIZE (the batched-native list scan shares
-    one prefix-tile enumeration across the batch, so the list engines'
-    per-query cost collapses at ``B >= BATCHED_LIST_MIN_B`` — below
-    that they pay the per-query lockstep scan), and the catalogue norm
-    spectrum (a decaying spectrum lets the Cauchy-Schwarz scan certify
-    after a few contiguous blocks — the Pallas kernel's best case; a
-    flat spectrum makes it a full scan, so BTA wins when the batched
-    list path is live).
+    MEASURED route first: when a :class:`CostTable` (the explicit
+    argument, or the context's own) has an observed per-query cost for
+    every auto candidate at this batch's (power-of-two bucket, sign
+    bucket), the cheapest measured engine wins — the constant below
+    never fires on a warmed serving path.
+
+    COLD fallback: decides from three cheap HOST-side statistics — batch
+    sparsity ``nnz(u)`` (sparse queries make TA's per-round cost
+    collapse to the active lists), the BATCH SIZE (the batched-native
+    list scan shares one prefix-tile enumeration across the batch, so
+    the list engines' per-query cost collapses at
+    ``B >= BATCHED_LIST_MIN_B`` — below that they pay the per-query
+    lockstep scan), and the catalogue norm spectrum (a decaying spectrum
+    lets the Cauchy-Schwarz scan certify after a few contiguous blocks —
+    the Pallas kernel's best case; a flat spectrum makes it a full scan,
+    so BTA wins when the batched list path is live).
     """
     arr = U if isinstance(U, np.ndarray) else np.asarray(U)
     b = 1 if arr.ndim < 2 else arr.shape[0]
+    ct = cost_table if cost_table is not None else ctx.cost_table
+    if ct is not None:
+        eng = _select_by_cost(ctx, arr, batch_bucket(b), ct)
+        if eng is not None:
+            return eng
     batched_lists = (ctx.resolved_prefix_depth > 0
                      and batch_bucket(b) >= BATCHED_LIST_MIN_B)
     if _host_nnz_frac(arr) < 0.25 and \
@@ -1020,8 +1178,17 @@ def auto_candidates():
     scan over the per-query list loop); warming beyond it
     (``norm_sharded`` in particular, whose layout build copies the whole
     catalogue) is wasted startup work.
+
+    ``naive`` is a candidate for the MEASURED route only (the cold
+    heuristic never picks it): the full ``[B,R]@[R,M]`` matmul batches
+    through one sgemm, so past B~32 on CPU its per-query cost collapses
+    ~10x from B=1 while the pruned engines' shared scans amortise only
+    2-4x — the enumeration is shared but each lane's depth is driven by
+    the batch's worst lane. Whether the scan's skipped scores beat the
+    matmul's raw throughput at a given (bucket, sign) is exactly the
+    question the cost table answers with measurements.
     """
-    return ["ta", "bta",
+    return ["ta", "bta", "naive",
             "pallas" if jax.default_backend() == "tpu" else "norm"]
 
 

@@ -470,6 +470,13 @@ class SegmentedCatalogue:
         # highest M-bucket any warmup has traced (DESIGN.md §10): the
         # headroom-renewal memo, so the pre-pay happens once per doubling
         self._headroom_bucket = 0
+        # mutation epoch: bumped under the lock by EVERY visible mutation
+        # (append/tombstone/update AND the compaction swap, which applies
+        # pending deletes). (version, epoch) is the result-cache token —
+        # version alone is NOT enough, deltas mutate visibility without
+        # bumping it (DESIGN.md §13).
+        self._epoch = 0
+        self._invalidation_listeners: List[Callable[[], None]] = []
 
     # -- introspection -------------------------------------------------------
 
@@ -484,6 +491,36 @@ class SegmentedCatalogue:
     def _segments(self) -> List[DeltaSegment]:
         """Sealed segments (oldest first) + the active delta. Lock held."""
         return [*self._frozen, self._delta]
+
+    def cache_token(self) -> Tuple[int, int]:
+        """``(snapshot version, mutation epoch)`` — the identity of the
+        CURRENTLY VISIBLE catalogue contents. Any visible mutation
+        changes the token, so a result cached under a token captured
+        BEFORE its scan dispatched can never serve contents older than
+        that token. Compare tokens only for equality: a swap bumps
+        version while epoch keeps counting."""
+        with self._lock:
+            return (self._snapshot.version, self._epoch)
+
+    def add_invalidation_listener(self, fn: Callable[[], None]) -> None:
+        """Register ``fn`` to run after every visible mutation (append /
+        tombstone / update / compaction swap — including a swap that
+        applied mid-build deletes). Listeners may fire while a mutating
+        caller still holds the catalogue lock (the synchronous
+        compaction path), so they MUST NOT call back into the catalogue;
+        bumping a flag or clearing a cache's own structures is the
+        intended use."""
+        with self._lock:
+            self._invalidation_listeners.append(fn)
+
+    def _bump_epoch_locked(self) -> None:
+        self._epoch += 1
+
+    def _notify_invalidation(self) -> None:
+        with self._lock:
+            listeners = list(self._invalidation_listeners)
+        for fn in listeners:
+            fn()
 
     @property
     def delta_occupancy(self) -> int:
@@ -654,6 +691,7 @@ class SegmentedCatalogue:
                 self._note_delta_peak()
                 out[i] = gid
             self.stats.n_inserts += R.shape[0]
+            self._bump_epoch_locked()
         self._after_mutation()
         return out
 
@@ -671,6 +709,7 @@ class SegmentedCatalogue:
             located = [(gid, *self._locate(gid)) for gid in gids]
             self._kill_located(located)
             self.stats.n_deletes += len(gids)
+            self._bump_epoch_locked()
             self._maybe_compact_locked()
         self._after_mutation()
 
@@ -707,6 +746,7 @@ class SegmentedCatalogue:
                 self._delta.append(row, gid)
                 self._note_delta_peak()
             self.stats.n_updates += len(gids)
+            self._bump_epoch_locked()
             self._maybe_compact_locked()
         self._after_mutation()
 
@@ -726,6 +766,7 @@ class SegmentedCatalogue:
         acquires the lock to swap, so joining under it would deadlock.
         Every mutation entry point calls this after releasing the lock.
         """
+        self._notify_invalidation()
         self.check_watchdog()
         self._enforce_chain_cap()
 
@@ -909,6 +950,9 @@ class SegmentedCatalogue:
                     self._snapshot = new_snap
                     self._frozen = [s for s in self._frozen
                                     if s not in folding]
+                    # the swap changes visible identity (new version,
+                    # pending deletes applied): old cache tokens die here
+                    self._bump_epoch_locked()
                     self.stats.n_compactions += 1
                     dt = time.perf_counter() - t_build
                     self.stats.last_compaction_s = dt
@@ -922,6 +966,7 @@ class SegmentedCatalogue:
                     self._consec_build_failures = 0
                     self._retry_not_before = 0.0
                     self._last_backoff_s = 0.0
+                self._notify_invalidation()
             except Exception as exc:
                 # the sealed segments stay in self._frozen: still
                 # queryable, re-folded by the next compaction — a failed

@@ -45,8 +45,10 @@ import numpy as np
 
 from repro.core import SepLRModel, TopKIndex
 from repro.core.engines import (
+    CostTable,
     Engine,
     EngineContext,
+    batch_bucket,
     engine_names,
     get_engine,
     select_engine,
@@ -67,12 +69,19 @@ LATENCY_RING = 512
 class ServeStats:
     """Per-engine serving statistics.
 
-    Latency is tracked two ways: the lifetime mean (``us_per_query``,
-    exact over every query ever served) and percentiles over a BOUNDED
+    Latency is tracked three ways: the lifetime mean (``us_per_query``,
+    exact over every query ever served), percentiles over a BOUNDED
     ring of recent per-batch latencies (``p50_us``/``p95_us``/``p99_us``
     — each entry is one batch's per-query microseconds, so tail entries
     reflect stragglers like a post-mutation retrace or a compaction
-    swap). ``delta_scored`` counts scores spent on the streaming delta
+    swap), and percentiles over a ring of per-REQUEST latencies
+    (``req_p50_us``/``req_p95_us``/``req_p99_us`` — enqueue→result wall
+    time for one caller request, the number an SLO is written against).
+    The per-batch and per-request views DIVERGE under micro-batching:
+    a request coalesced into a shared batch waits in the queue before
+    its batch dispatches, time the per-batch column never sees — which
+    is exactly why both columns exist (DESIGN.md §13).
+    ``delta_scored`` counts scores spent on the streaming delta
     segments, separating mutation-induced work from base-scan work.
     ``sign_batches`` counts served batches per sign bucket (the compile
     specialisation axis of the batched list scan, DESIGN.md §11) — a
@@ -86,6 +95,10 @@ class ServeStats:
     depth_sum: int = 0
     delta_scored: int = 0
     lat_us_ring: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
+    #: per-REQUEST enqueue→result microseconds (one entry per caller
+    #: request; honest under coalescing, unlike the per-batch ring)
+    req_lat_us_ring: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
     sign_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
     #: degradation-ladder decisions taken while serving THIS method
@@ -125,6 +138,29 @@ class ServeStats:
     def p99_us(self) -> float:
         return self.latency_percentile(99.0)
 
+    def record_request_latency(self, us: float) -> None:
+        """One caller request completed ``us`` microseconds after it was
+        submitted (enqueue→result, queue wait included)."""
+        self.req_lat_us_ring.append(float(us))
+
+    def request_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of recent per-REQUEST latencies, us."""
+        if not self.req_lat_us_ring:
+            return 0.0
+        return float(np.percentile(np.asarray(self.req_lat_us_ring), q))
+
+    @property
+    def req_p50_us(self) -> float:
+        return self.request_percentile(50.0)
+
+    @property
+    def req_p95_us(self) -> float:
+        return self.request_percentile(95.0)
+
+    @property
+    def req_p99_us(self) -> float:
+        return self.request_percentile(99.0)
+
 
 @dataclasses.dataclass
 class AdmissionPolicy:
@@ -159,16 +195,26 @@ class TopKServer:
                  compact_async: bool = False,
                  policy: Optional[AdmissionPolicy] = None):
         self.model = model
+        # per-(engine, batch-bucket, sign-bucket) measured serve cost:
+        # the serving router's table (select_engine consults it through
+        # the context) and the admission ladder's fallback. Passed into
+        # the catalogue's ctx_kwargs so every compaction-built context
+        # SHARES it — measurements survive snapshot swaps.
+        self.cost_table = CostTable()
         self.catalogue = SegmentedCatalogue(
             model.targets, delta_capacity=delta_capacity,
-            compact_async=compact_async, block_size=block_size)
+            compact_async=compact_async, block_size=block_size,
+            cost_table=self.cost_table)
         self.max_batch = max_batch
         self.block_size = block_size
         self.stats: Dict[str, ServeStats] = {}
         self.policy = policy if policy is not None else AdmissionPolicy()
-        # per-engine EWMA of per-query serve seconds: the ladder's cost
-        # model. Seeded lazily from observed latencies; tests set entries
-        # directly to make admission decisions deterministic.
+        # per-engine EWMA of per-query serve seconds: the ladder's FIRST
+        # cost source (tests set entries directly to make admission
+        # decisions deterministic); when an engine has no entry here the
+        # ladder falls back to the shared :attr:`cost_table` (primed by
+        # warmup), and only an engine absent from BOTH predicts the
+        # optimistic 0.
         self._cost_ewma: Dict[str, float] = {}
         self._admit_lock = threading.Lock()
         self._inflight = 0
@@ -322,15 +368,22 @@ class TopKServer:
 
         Returns ``(engine_or_None, budget, rung)`` — ``None`` engine
         means shed. Cost predictions come from the per-engine EWMA of
-        observed per-query seconds (:attr:`_cost_ewma`); an engine with
-        no history predicts 0 (optimistic: admit, then learn).
+        observed per-query seconds (:attr:`_cost_ewma`), falling back to
+        the measured :attr:`cost_table` at this chunk's batch bucket
+        (warmup primes it, so a freshly warmed server admits from
+        measurements); only an engine absent from both predicts 0
+        (optimistic: admit, then learn).
         """
         pol = self.policy
         if remaining_s is None:
             return eng, None, "full"
+        bucket = batch_bucket(max(n, 1))
 
         def cost(name: str) -> float:
-            return self._cost_ewma.get(name, 0.0) * n
+            c = self._cost_ewma.get(name)
+            if c is None:
+                c = self.cost_table.predict(name, bucket, "")
+            return (c or 0.0) * n
 
         if remaining_s <= 0.0:
             if pol.shed_on_overload:
@@ -476,9 +529,14 @@ class TopKServer:
             per_q = dt / max(n, 1)
             self._cost_ewma[key] = (per_q if prev is None
                                     else 0.8 * prev + 0.2 * per_q)
+            # ... and granularly per (engine, batch-bucket, sign) in the
+            # shared table the serving router reads (DESIGN.md §13)
+            self.cost_table.observe(key, batch_bucket(n), label, per_q)
             self._record(run_eng.name, res, dt, n,
                          info.delta_scored, sign_label=label)
             outs.append(res)
+        req_stats.record_request_latency(
+            1e6 * (time.perf_counter() - t_admit))
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *outs)
 

@@ -1,0 +1,325 @@
+"""Async micro-batching pipeline: exactness, coalescing, the result
+cache's invalidation contract, measured-cost dispatch, and the
+zero-compile guarantee through the queue-formed path (DESIGN.md §13).
+
+Shapes here are PROCESS-UNIQUE where a test asserts on trace counts:
+the argument-passing executors are cached process-wide, so a shape
+another test already traced would hide a retrace this test must see
+(ROADMAP standing gotcha).
+"""
+import numpy as np
+import pytest
+
+from repro.core import CostTable, SepLRModel
+from repro.core import faults
+from repro.core.engines import (
+    EngineContext,
+    auto_candidates,
+    batch_bucket,
+    cost_label,
+    get_engine,
+    select_engine,
+)
+from repro.serving.pipeline import AsyncTopKServer, ResultCache
+from repro.serving.server import AdmissionPolicy, TopKServer
+
+
+def _model(m=512, r=16, seed=0):
+    rng = np.random.default_rng(seed)
+    T = rng.standard_normal((m, r)).astype(np.float32)
+    U = rng.standard_normal((32, r)).astype(np.float32)
+    return T, U
+
+
+def _oracle_vals(T, U, k):
+    s = U.astype(np.float64) @ T.astype(np.float64).T
+    return np.sort(s, axis=1)[:, ::-1][:, :k]
+
+
+# -- cost table (satellite: measured costs replace BATCHED_LIST_MIN_B) ----
+
+
+def test_cost_table_fallback_chain():
+    ct = CostTable()
+    assert ct.predict("bta", 8, "mixed-dense") is None
+    ct.observe("bta", 8, "mixed-dense", 1e-3)
+    assert ct.predict("bta", 8, "mixed-dense") == pytest.approx(1e-3)
+    # label miss -> empty-label entry -> engine aggregate
+    ct.observe("bta", 16, "", 2e-3)
+    assert ct.predict("bta", 16, "nonneg-dense") == pytest.approx(2e-3)
+    assert ct.predict("bta", 4, "mixed-dense") is not None   # aggregate
+    assert ct.predict("bta", 4, "mixed-dense",
+                      granular_only=True) is None
+    # EWMA folds, engine aggregate tracks every observation
+    ct.observe("bta", 8, "mixed-dense", 2e-3)
+    assert 1e-3 < ct.predict("bta", 8, "mixed-dense") < 2e-3
+    assert ct.engine_cost("bta") is not None
+    assert ct.engine_cost("never-ran") is None
+    assert ct.n_observations == 3
+
+
+def test_select_engine_measured_route_and_cold_fallback():
+    T, _ = _model(m=521, r=18, seed=3)        # process-unique shape
+    rng = np.random.default_rng(3)
+    U = rng.standard_normal((8, 18)).astype(np.float32)
+    ct = CostTable()
+    ctx = EngineContext(T, cost_table=ct)
+    cold = select_engine(ctx, U)              # heuristic (table empty)
+    bucket = batch_bucket(U.shape[0])
+    # measure every auto candidate; make one of them clearly cheapest
+    cheap = ("ta" if cold.name != "ta" else "norm")
+    for name in auto_candidates():
+        lbl = cost_label(get_engine(name), ctx, U)
+        ct.observe(name, bucket, lbl, 1e-9 if name == cheap else 1.0)
+    assert select_engine(ctx, U).name == cheap
+    # an UNMEASURED candidate at this bucket kills the measured route:
+    # fresh table with partial coverage falls back to the heuristic
+    ct2 = CostTable()
+    ct2.observe(auto_candidates()[0], bucket,
+                cost_label(get_engine(auto_candidates()[0]), ctx, U),
+                1e-9)
+    ctx2 = EngineContext(T, cost_table=ct2)
+    assert select_engine(ctx2, U).name == cold.name
+    # explicit-argument table overrides the context's
+    assert select_engine(ctx2, U, cost_table=ct).name == cheap
+
+
+def test_warmup_primes_cost_table_and_admission_uses_it():
+    T, U = _model(m=517, r=20, seed=5)        # process-unique shape
+    srv = TopKServer(SepLRModel(T), max_batch=8,
+                     policy=AdmissionPolicy(deadline_ms=50.0))
+    assert srv.cost_table.n_observations == 0
+    srv.warmup(5, batch_sizes=(1, 8), engines=["bta", "norm"])
+    # one timed run per warmed (engine, bucket, sign) landed in the table
+    assert srv.cost_table.n_observations > 0
+    assert srv.cost_table.engine_cost("bta") is not None
+    # the ladder's fallback reads the warmed table when _cost_ewma is
+    # empty: an engine measured as catastrophically slow is downgraded
+    # on the FIRST query — "optimistic when unseen" no longer applies
+    # to warmed engines
+    for _ in range(64):                       # drown the EWMA in "slow"
+        srv.cost_table.observe("bta", 8, "mixed-dense", 10.0)
+        srv.cost_table.observe("bta", 8, "", 10.0)
+    assert not srv._cost_ewma                 # nothing served yet
+    res = srv.query(U[:8], 5, "bta")
+    st = srv.stats["bta"]
+    assert sum(st.degradations.values()) >= 1, st.degradations
+    vals = _oracle_vals(T, U[:8], 5)
+    assert np.allclose(np.asarray(res.values), vals, atol=1e-4)
+
+
+# -- per-request latency accounting (satellite: honest p50/p99) -----------
+
+
+def test_serve_stats_per_request_ring():
+    T, U = _model()
+    srv = TopKServer(SepLRModel(T), max_batch=8)
+    srv.query(U[:4], 5, "norm")
+    srv.query(U[:4], 5, "norm")
+    st = srv.stats["norm"]
+    assert len(st.lat_us_ring) == 1 or len(st.lat_us_ring) == 2
+    # one per-request entry per query() CALL on the sync path
+    assert len(st.req_lat_us_ring) == 2
+    assert st.req_p50_us > 0 and st.req_p99_us >= st.req_p50_us
+    empty = type(st)()
+    assert empty.req_p99_us == 0.0
+
+
+# -- the async pipeline ---------------------------------------------------
+
+
+def test_async_exact_and_coalesces():
+    T, U = _model(m=1024)
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=8, flush_ms=5.0,
+                          method="bta")
+    srv.warmup(5)
+    with srv:
+        res = srv.query(U, 5)                 # 32 one-row submissions
+        assert np.allclose(np.asarray(res.values),
+                           _oracle_vals(T, U, 5), atol=1e-4)
+        ps = srv.pipeline_stats
+        assert ps.n_requests == 32
+        # the device-busy window coalesces: far fewer batches than
+        # requests (first request dispatches alone on the idle pipeline)
+        assert ps.n_batches < ps.n_requests
+        assert max(int(b) for b in ps.batch_size_hist) > 1
+        # per-REQUEST latency recorded for every submission; per-batch
+        # ring only for dispatched batches
+        st = srv.stats["bta"]
+        assert len(st.req_lat_us_ring) == 32
+        assert len(st.lat_us_ring) == ps.n_batches
+    # close() is idempotent and the threads are down
+    srv.close()
+    with pytest.raises(RuntimeError):
+        srv.submit(U[0], 5)
+
+
+def test_async_submit_validation():
+    T, _ = _model()
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=4)
+    with srv:
+        with pytest.raises(ValueError):
+            srv.submit(np.ones(16, np.float32), 0)
+        with pytest.raises(ValueError):
+            srv.submit(np.ones(7, np.float32), 5)      # wrong rank
+        with pytest.raises(ValueError):
+            srv.submit(np.full(16, np.nan, np.float32), 5)
+        with pytest.raises(ValueError):
+            srv.submit(np.ones(16, np.float32), 5, deadline_ms=-1.0)
+
+
+def test_async_deadline_shed_at_dispatch():
+    T, U = _model()
+    srv = AsyncTopKServer(
+        SepLRModel(T), max_batch=4, method="bta",
+        policy=AdmissionPolicy(deadline_ms=0.0))
+    srv.warmup(5)
+    with srv:
+        res = srv.submit(U[0], 5).result(timeout=30)
+        # the PR-7 sentinel, via the queue: nothing certified, nothing
+        # pretending to be a result
+        assert np.all(np.asarray(res.indices) == -1)
+        assert np.all(np.isneginf(np.asarray(res.values)))
+        assert np.all(np.isposinf(np.asarray(res.upper)))
+        st = srv.stats["bta"]
+        assert st.degradations.get("shed", 0) >= 1
+        assert srv.pipeline_stats.n_shed >= 1
+
+
+# -- result cache ---------------------------------------------------------
+
+
+def test_result_cache_lru_and_counters():
+    c = ResultCache(capacity=2)
+    c.insert(("a", 5, (0, 0)), ("ra",))
+    c.insert(("b", 5, (0, 0)), ("rb",))
+    assert c.lookup(("a", 5, (0, 0))) == ("ra",)      # refreshes "a"
+    c.insert(("c", 5, (0, 0)), ("rc",))               # evicts "b"
+    assert c.lookup(("b", 5, (0, 0))) is None
+    assert c.lookup(("a", 5, (0, 0))) == ("ra",)
+    assert c.hits == 2 and c.misses == 1 and len(c) == 2
+    c.invalidate()
+    assert len(c) == 0 and c.n_invalidations == 1
+
+
+def test_async_cache_hits_and_mutation_invalidation():
+    T, U = _model(m=1024)
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=8, method="bta",
+                          delta_capacity=16)
+    srv.warmup(5)
+    rank = T.shape[1]
+    with srv:
+        u = U[0]
+        r1 = srv.submit(u, 5).result(timeout=30)
+        misses0 = srv.cache.misses
+        r2 = srv.submit(u, 5).result(timeout=30)
+        assert srv.cache.hits >= 1
+        assert srv.cache.misses == misses0    # second ask never scanned
+        assert np.array_equal(np.asarray(r1.values),
+                              np.asarray(r2.values))
+        # ADD: a row that must be the new top-1 — the cached answer is
+        # stale the instant the append lands
+        big = 100.0 * u / max(float(np.linalg.norm(u)), 1e-9)
+        gid = int(srv.add_targets(big[None])[0])
+        r3 = srv.submit(u, 5).result(timeout=30)
+        assert int(np.asarray(r3.indices)[0, 0]) == gid
+        # DELETE: and it disappears again, exactly
+        srv.delete_targets([gid])
+        r4 = srv.submit(u, 5).result(timeout=30)
+        assert gid not in set(np.asarray(r4.indices)[0].tolist())
+        assert np.allclose(np.asarray(r4.values)[0],
+                           _oracle_vals(T, u[None], 5)[0], atol=1e-4)
+        # UPDATE through the delegating wrapper keeps exactness too
+        gid2 = int(srv.add_targets(big[None])[0])
+        srv.update_targets([gid2], -big[None])
+        r5 = srv.submit(u, 5).result(timeout=30)
+        assert int(np.asarray(r5.indices)[0, 0]) != gid2
+
+
+def test_async_cache_never_serves_across_version_bump():
+    T, U = _model(m=1024)
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=8, method="bta",
+                          delta_capacity=16)
+    srv.warmup(5)
+    with srv:
+        u = U[1]
+        srv.submit(u, 5).result(timeout=30)
+        assert len(srv.cache) == 1
+        v0 = srv.catalogue.version
+        rows = np.random.default_rng(9).standard_normal(
+            (1, T.shape[1])).astype(np.float32)
+        srv.add_targets(rows)
+        srv.catalogue.compact(wait=True)      # version bump
+        assert srv.catalogue.version > v0
+        # the compaction-fired listener emptied the cache, and the next
+        # ask re-scans (a miss, not a hit) under the NEW token
+        assert len(srv.cache) == 0
+        hits0 = srv.cache.hits
+        res = srv.submit(u, 5).result(timeout=30)
+        assert srv.cache.hits == hits0
+        live = np.concatenate([T, rows])
+        assert np.allclose(np.asarray(res.values)[0],
+                           _oracle_vals(live, u[None], 5)[0], atol=1e-4)
+
+
+def test_async_cache_safe_under_failed_build():
+    """A fault-injected FAILED compaction build must not let the cache
+    serve pre-mutation answers: the mutation epoch bumped regardless,
+    and the chain keeps serving exact results."""
+    T, U = _model(m=1024)
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=8, method="bta",
+                          delta_capacity=4)
+    srv.warmup(5)
+    rank = T.shape[1]
+    with srv:
+        u = U[2]
+        srv.submit(u, 5).result(timeout=30)   # prime the cache
+        big = 50.0 * u / max(float(np.linalg.norm(u)), 1e-9)
+        with faults.injected("compaction.build",
+                             error=faults.FaultInjected):
+            # enough appends to overflow the delta and trigger the
+            # (failing) build — the sealed chain keeps serving
+            gids = [int(srv.add_targets(big[None])[0])]
+            for i in range(6):
+                gids.append(int(srv.add_targets(
+                    0.01 * np.ones((1, rank), np.float32))[0]))
+            assert srv.catalogue.stats.n_failed_compactions >= 1
+            res = srv.submit(u, 5).result(timeout=30)
+            assert int(np.asarray(res.indices)[0, 0]) == gids[0]
+        # recovery: a forced compact folds the chain; still exact
+        srv.catalogue.compact(wait=True)
+        res2 = srv.submit(u, 5).result(timeout=30)
+        assert int(np.asarray(res2.indices)[0, 0]) == gids[0]
+
+
+# -- the zero-compile guarantee through the async path --------------------
+
+
+def test_async_compaction_compile_free():
+    """Queue-formed micro-batches only ever dispatch warmed (bucket,
+    sign, engine) configs: compactions under async traffic retrace
+    NOTHING (the acceptance-pinned invariant). Process-unique shape."""
+    rng = np.random.default_rng(11)
+    T = rng.standard_normal((613, 22)).astype(np.float32)
+    U = rng.standard_normal((64, 22)).astype(np.float32)
+    srv = AsyncTopKServer(SepLRModel(T), max_batch=8, method="auto",
+                          delta_capacity=8)
+    srv.warmup(6)
+    with srv:
+        srv.query(U[:16], 6)                  # traffic before mutations
+        for i in range(20):                   # forces >= 2 compactions
+            srv.add_targets(rng.standard_normal(
+                (1, 22)).astype(np.float32))
+            if i % 5 == 0:
+                srv.query(U[16 + i:17 + i], 6)
+        srv.catalogue.flush()
+        srv.query(U[:32], 6)                  # post-compaction traffic
+        ms = srv.mutation_stats
+        assert ms["n_compactions"] >= 1
+        assert ms["engine_compiles_per_compaction"] == 0, ms
+        # and the traffic stayed exact throughout — the oracle check on
+        # the final state (catalogue = T + 20 appended rows)
+    live, gids = srv.catalogue.as_dense()
+    res = srv.server.query(U[:4], 6, "norm")
+    assert np.allclose(np.asarray(res.values),
+                       _oracle_vals(live, U[:4], 6), atol=1e-4)
