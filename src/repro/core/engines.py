@@ -102,6 +102,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.blocked import (
     blocked_topk,
     blocked_topk_batched_native,
@@ -177,6 +178,10 @@ def _note_trace(name: str, bcfg: tuple = ()) -> None:
     _TRACE_TOTALS[name] = _TRACE_TOTALS.get(name, 0) + 1
     key = (name, bcfg)
     _TRACE_DETAIL[key] = _TRACE_DETAIL.get(key, 0) + 1
+    # observability seam: a trace is always an anomaly worth journaling
+    # (it only happens off the warmed path), so it carries an event as
+    # well as the counter (DESIGN.md §14)
+    obs.on_engine_trace(name, bcfg)
 
 
 def trace_totals() -> Dict[str, int]:
@@ -187,6 +192,21 @@ def trace_totals() -> Dict[str, int]:
 def trace_detail() -> Dict[Tuple[str, tuple], int]:
     """Snapshot of the per-(engine, sign-bucket) trace counters."""
     return dict(_TRACE_DETAIL)
+
+
+def note_pruning_metrics(engine: str, n: int, n_scored: int,
+                         depth_sum: int, m_live: int,
+                         per_query_us: float,
+                         sign_label: str = "") -> None:
+    """Record one harvested batch's pruning-efficiency metrics into the
+    observability registry: ``n_scored`` and ``depth`` totals plus the
+    scored FRACTION vs the live catalogue size — the paper's efficiency
+    claim as a live metric instead of an offline bench column
+    (DESIGN.md §14). Called by the serving layer after it materialises
+    a result host-side (never from inside an executor: results on the
+    dispatch path are device futures and must stay unblocked)."""
+    obs.on_batch_served(engine, n, n_scored, depth_sum, m_live,
+                        per_query_us, sign_label)
 
 
 class CostTable:
@@ -228,12 +248,16 @@ class CostTable:
         a = self.alpha
         with self._lock:
             prev = self._ewma.get(key)
-            self._ewma[key] = (per_query_s if prev is None
-                               else (1 - a) * prev + a * per_query_s)
+            ewma = (per_query_s if prev is None
+                    else (1 - a) * prev + a * per_query_s)
+            self._ewma[key] = ewma
             prev_e = self._engine.get(engine)
             self._engine[engine] = (per_query_s if prev_e is None
                                     else (1 - a) * prev_e + a * per_query_s)
             self.n_observations += 1
+        # export the folded EWMA (not the raw sample) so the gauge IS
+        # the router's current belief for this (engine, bucket, sign)
+        obs.on_cost_observation(engine, bucket, label, ewma)
 
     def predict(self, engine: str, bucket: int, label: str,
                 granular_only: bool = False) -> Optional[float]:

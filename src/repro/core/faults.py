@@ -48,6 +48,8 @@ import threading
 import time
 from typing import Dict, Optional, Type
 
+from repro import obs
+
 __all__ = [
     "FaultInjected", "register_point", "list_points", "arm", "disarm",
     "disarm_all", "fire", "counters", "injected",
@@ -163,6 +165,10 @@ def fire(point: str) -> bool:
         if spec.times is not None and spec.fired >= spec.times:
             _ARMED.pop(point, None)
         error, delay = spec.error, spec.delay_s
+    # observability: a trigger going off is exactly the kind of rare
+    # state transition the event journal exists for — emitted OFF the
+    # registry lock (journal takes only its own lock)
+    obs.on_fault_fired(point)
     # sleep/raise OUTSIDE the lock: a stalled build must not block other
     # threads' (un-armed) fire() calls
     if delay > 0.0:

@@ -78,6 +78,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import faults
 from repro.core.driver import NEG_INF, merge_block_into_carry_batched
 from repro.core.engines import (Engine, EngineContext, batch_bucket,
@@ -513,8 +514,12 @@ class SegmentedCatalogue:
         with self._lock:
             self._invalidation_listeners.append(fn)
 
-    def _bump_epoch_locked(self) -> None:
+    def _bump_epoch_locked(self, kind: str) -> None:
         self._epoch += 1
+        # journal the new (version, epoch) identity under the catalogue
+        # lock — obs emission takes only its own lock, never calls back
+        # (the same constraint invalidation listeners live under)
+        obs.on_epoch_bump(kind, self._snapshot.version, self._epoch)
 
     def _notify_invalidation(self) -> None:
         with self._lock:
@@ -589,6 +594,9 @@ class SegmentedCatalogue:
             if not self._watchdog_flagged:
                 self._watchdog_flagged = True
                 self.stats.n_stuck_builds += 1
+                obs.on_compaction(
+                    "stuck", version=self._snapshot.version,
+                    overdue_s=time.monotonic() - started)
             return True
 
     def _live_concat_locked(self, snap: Snapshot, segs
@@ -691,7 +699,7 @@ class SegmentedCatalogue:
                 self._note_delta_peak()
                 out[i] = gid
             self.stats.n_inserts += R.shape[0]
-            self._bump_epoch_locked()
+            self._bump_epoch_locked("insert")
         self._after_mutation()
         return out
 
@@ -709,7 +717,7 @@ class SegmentedCatalogue:
             located = [(gid, *self._locate(gid)) for gid in gids]
             self._kill_located(located)
             self.stats.n_deletes += len(gids)
-            self._bump_epoch_locked()
+            self._bump_epoch_locked("delete")
             self._maybe_compact_locked()
         self._after_mutation()
 
@@ -746,7 +754,7 @@ class SegmentedCatalogue:
                 self._delta.append(row, gid)
                 self._note_delta_peak()
             self.stats.n_updates += len(gids)
-            self._bump_epoch_locked()
+            self._bump_epoch_locked("update")
             self._maybe_compact_locked()
         self._after_mutation()
 
@@ -794,6 +802,9 @@ class SegmentedCatalogue:
                         return
                     attempts += 1
                     self.stats.n_forced_sync_compactions += 1
+                    obs.on_compaction("forced_sync",
+                                      chain_len=len(self._frozen),
+                                      attempt=attempts)
                     self._compact_locked(force=True, force_sync=True)
                     continue
             t.join()        # off-lock: the build takes the lock to swap
@@ -952,7 +963,7 @@ class SegmentedCatalogue:
                                     if s not in folding]
                     # the swap changes visible identity (new version,
                     # pending deletes applied): old cache tokens die here
-                    self._bump_epoch_locked()
+                    self._bump_epoch_locked("swap")
                     self.stats.n_compactions += 1
                     dt = time.perf_counter() - t_build
                     self.stats.last_compaction_s = dt
@@ -966,6 +977,11 @@ class SegmentedCatalogue:
                     self._consec_build_failures = 0
                     self._retry_not_before = 0.0
                     self._last_backoff_s = 0.0
+                    obs.on_compaction(
+                        "success", version=version, epoch=self._epoch,
+                        duration_s=dt, engine_compiles=own_compiles,
+                        headroom_compiles=headroom_compiles,
+                        num_live=int(new_snap.num_rows - new_snap.n_dead))
                 self._notify_invalidation()
             except Exception as exc:
                 # the sealed segments stay in self._frozen: still
@@ -989,6 +1005,11 @@ class SegmentedCatalogue:
                         self.build_backoff_max_s)
                     self._last_backoff_s = backoff
                     self._retry_not_before = time.monotonic() + backoff
+                    obs.on_compaction(
+                        "fail", version_attempted=version,
+                        epoch=self._epoch, error=repr(exc),
+                        consecutive_failures=self._consec_build_failures,
+                        backoff_s=backoff)
                     if (self.auto_retry and self.compact_async
                             and self._consec_build_failures
                             <= self.build_retry_limit
@@ -997,6 +1018,9 @@ class SegmentedCatalogue:
                         tmr.daemon = True
                         self._retry_timer = tmr
                         tmr.start()
+                        obs.on_compaction(
+                            "retry_scheduled", version_attempted=version,
+                            backoff_s=backoff)
             else:
                 ok = True
             finally:
@@ -1015,8 +1039,16 @@ class SegmentedCatalogue:
 
         if self._consec_build_failures:
             self.stats.n_build_retries += 1     # attempt after >=1 failure
+            obs.on_compaction(
+                "retry", version_from=snap.version, version_to=version,
+                consecutive_failures=self._consec_build_failures)
         self._build_started_at = time.monotonic()
         self._watchdog_flagged = False
+        obs.on_compaction(
+            "start", version_from=snap.version, version_to=version,
+            epoch=self._epoch, chain_len=len(folding),
+            n_rows=int(new_rows.shape[0]),
+            sync=bool(not self.compact_async or force_sync))
         if self.compact_async and not force_sync:
             t = threading.Thread(target=build, name="segcat-compact",
                                  daemon=True)

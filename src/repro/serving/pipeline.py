@@ -56,6 +56,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import SepLRModel
 from repro.core.engines import (
     auto_candidates,
@@ -112,10 +113,11 @@ class ResultCache:
             row = self._data.get(key)
             if row is None:
                 self.misses += 1
-                return None
-            self._data.move_to_end(key)
-            self.hits += 1
-            return row
+            else:
+                self._data.move_to_end(key)
+                self.hits += 1
+        obs.on_cache_lookup(row is not None)
+        return row
 
     def insert(self, key: tuple, row: tuple) -> None:
         with self._lock:
@@ -127,17 +129,20 @@ class ResultCache:
     def invalidate(self) -> None:
         """Drop everything. Runs as the catalogue's invalidation
         listener — possibly under the catalogue lock (synchronous
-        compaction), so it must not call back into the catalogue."""
+        compaction), so it must not call back into the catalogue.
+        (The obs journal emission below holds only the journal's own
+        lock, so it keeps that guarantee.)"""
         with self._lock:
             self._data.clear()
             self.n_invalidations += 1
+        obs.on_cache_invalidated()
 
 
 class _Request:
     """One submitted query riding the pipeline."""
 
     __slots__ = ("u", "k", "method", "budget", "deadline_s", "t_enqueue",
-                 "flush_by", "event", "row", "error")
+                 "flush_by", "event", "row", "error", "trace")
 
     def __init__(self, u: np.ndarray, k: int, method: str,
                  budget: Optional[int], deadline_ms: Optional[float],
@@ -159,6 +164,10 @@ class _Request:
         self.event = threading.Event()
         self.row: Optional[tuple] = None
         self.error: Optional[BaseException] = None
+        #: sampled obs trace (a :class:`repro.obs.Trace`) or None — set
+        #: by submit(); stage threads stamp spans onto it as the request
+        #: rides the pipeline
+        self.trace = None
 
     def fulfill(self, row: tuple) -> None:
         self.row = row
@@ -398,6 +407,11 @@ class AsyncTopKServer:
         if deadline_ms is None:
             deadline_ms = self.server.policy.deadline_ms
         req = _Request(row, int(k), m, budget, deadline_ms, self.flush_ms)
+        # sampled full-span tracing (cheap counters stay always-on);
+        # start is the enqueue timestamp so queue wait is span 1
+        req.trace = obs.TRACER.start_trace(
+            "topk.request", start=req.t_enqueue, k=int(k), method=m,
+            budget=budget if budget is None else int(budget))
         with self._cond:
             self._queue.append(req)
             self.pipeline_stats.n_requests += 1
@@ -479,27 +493,36 @@ class AsyncTopKServer:
         harvester. Runs concurrently with the device scan of the
         previous micro-batch."""
         srv = self.server
+        t_pop = time.perf_counter()
         k, method = batch[0].k, batch[0].method
         budget = batch[0].budget
+        req_name = get_engine(method).name
         # the token is captured BEFORE the scan dispatches: a mutation
         # landing mid-scan bumps the live token, so whatever this scan
         # returns is inserted under a token no future lookup can match
         token = self.catalogue.cache_token()
         misses: List[_Request] = []
         for r in batch:
+            obs.on_queue_wait(1e6 * (t_pop - r.t_enqueue))
             row = (None if budget is not None
                    else self.cache.lookup((r.u.tobytes(), r.k, token)))
             if row is not None:
                 self.pipeline_stats.n_cached += 1
+                if r.trace is not None:
+                    r.trace.span("queue_wait", start=r.t_enqueue,
+                                 end=t_pop)
+                    r.trace.span("cache_hit", start=t_pop,
+                                 version=token[0], epoch=token[1])
                 self._finish_request(r, method, row)
             else:
                 misses.append(r)
         if not misses:
             return
         n = len(misses)
+        obs.on_batch_formed(n)
         U = np.stack([r.u for r in misses])
-        req_stats = srv.stats.setdefault(get_engine(method).name,
-                                         ServeStats())
+        t_asm = time.perf_counter()
+        req_stats = srv.stats.setdefault(req_name, ServeStats())
         eng = (select_engine(self.ctx, U) if method == "auto"
                else get_engine(method))
         # admission at dispatch time (PR-7 ladder, per micro-batch):
@@ -509,13 +532,21 @@ class AsyncTopKServer:
         remaining = (min(deadlines) - time.perf_counter()
                      if deadlines else None)
         run_eng, bud, rung = srv._admit(eng, n, remaining)
+        t_route = time.perf_counter()
         if rung != "full":
-            req_stats.degradations[rung] = (
-                req_stats.degradations.get(rung, 0) + 1)
+            req_stats.bump_degradation(rung)
+            obs.on_degradation(req_name, rung)
         if run_eng is None:
             res = srv._shed_result(n, k)
-            req_stats.n_uncertified += n
+            req_stats.note_uncertified(n)
+            obs.on_uncertified(req_name, n)
             self.pipeline_stats.n_shed += n
+            for r in misses:
+                if r.trace is not None:
+                    r.trace.span("queue_wait", start=r.t_enqueue,
+                                 end=t_pop)
+                    r.trace.span("route", start=t_asm, end=t_route,
+                                 rung=rung)
             self._fulfill(misses, method, res, cache_token=None)
             self.pipeline_stats.n_batches += 1
             self.pipeline_stats.batch_size_hist[n] = \
@@ -525,6 +556,23 @@ class AsyncTopKServer:
             bud = budget
         label = (sign_bucket_label(run_eng.batch_config(self.ctx, U))
                  if run_eng.batch_config is not None else "")
+        # span annotations are assembled once per batch, only when at
+        # least one rider is traced (sampling keeps this off the common
+        # path): the cost-table entry the router consulted plus the
+        # stage timestamps the harvester turns into child spans
+        tinfo = None
+        if any(r.trace is not None for r in misses):
+            bucket = batch_bucket(n)
+            key = run_eng.name if bud is None else f"{run_eng.name}@budget"
+            pred = srv.cost_table.predict(key, bucket, label)
+            tinfo = {
+                "t_pop": t_pop, "t_asm": t_asm, "t_route": t_route,
+                "engine": run_eng.name, "rung": rung,
+                "cost_entry": f"{key}|{bucket}|{label}",
+                "predicted_us": (None if pred is None else 1e6 * pred),
+                "sign": label, "batch_size": n,
+                "version": token[0], "epoch": token[1],
+            }
         t0 = time.perf_counter()
         res, info = self.catalogue.query(run_eng, U, k, budget=bud)
         # NO np.asarray here: the result is a device future; blocking is
@@ -536,7 +584,7 @@ class AsyncTopKServer:
         self.pipeline_stats.batch_size_hist[n] = \
             self.pipeline_stats.batch_size_hist.get(n, 0) + 1
         self._harvest.put((misses, method, run_eng, bud, rung, label,
-                           res, info, t0, token))
+                           res, info, t0, token, tinfo))
 
     # -- stage 2: the harvester (device sync side) ---------------------------
 
@@ -546,10 +594,11 @@ class AsyncTopKServer:
             if item is None:
                 return
             (misses, method, run_eng, bud, rung, label,
-             res, info, t0, token) = item
+             res, info, t0, token, tinfo) = item
             try:
                 res = jax.tree_util.tree_map(np.asarray, res)  # blocks
-                dt = time.perf_counter() - t0
+                t_harvested = time.perf_counter()
+                dt = t_harvested - t0
                 n = len(misses)
                 if res.upper is None:
                     res = res._replace(upper=np.full(
@@ -558,10 +607,8 @@ class AsyncTopKServer:
                 req_stats = self.stats.setdefault(
                     get_engine(method).name, ServeStats())
                 if bud is not None:
-                    gaps = (res.upper[:, None] - res.values) > 0
-                    unc = np.logical_and(gaps, res.indices >= 0)
-                    req_stats.n_uncertified += int(
-                        np.sum(np.any(unc, axis=1)))
+                    self.server._note_certificates(
+                        req_stats, run_eng.name, bud, res)
                 key = (run_eng.name if bud is None
                        else f"{run_eng.name}@budget")
                 per_q = dt / max(n, 1)
@@ -571,6 +618,35 @@ class AsyncTopKServer:
                 self.cost_table.observe(key, batch_bucket(n), label, per_q)
                 self.server._record(run_eng.name, res, dt, n,
                                     info.delta_scored, sign_label=label)
+                if tinfo is not None:
+                    t_done = time.perf_counter()
+                    for r in misses:
+                        if r.trace is None:
+                            continue
+                        r.trace.root.set(engine=tinfo["engine"],
+                                         version=tinfo["version"],
+                                         epoch=tinfo["epoch"])
+                        r.trace.span("queue_wait", start=r.t_enqueue,
+                                     end=tinfo["t_pop"])
+                        r.trace.span("coalesce", start=tinfo["t_pop"],
+                                     end=tinfo["t_asm"],
+                                     batch_size=tinfo["batch_size"])
+                        r.trace.span("route", start=tinfo["t_asm"],
+                                     end=tinfo["t_route"],
+                                     engine=tinfo["engine"],
+                                     rung=tinfo["rung"],
+                                     cost_entry=tinfo["cost_entry"],
+                                     predicted_us=tinfo["predicted_us"])
+                        r.trace.span("dispatch", start=tinfo["t_route"],
+                                     end=t0)
+                        r.trace.span("device", start=t0,
+                                     end=t_harvested,
+                                     engine=tinfo["engine"],
+                                     sign=tinfo["sign"],
+                                     version=tinfo["version"],
+                                     epoch=tinfo["epoch"])
+                        r.trace.span("harvest", start=t_harvested,
+                                     end=t_done)
                 # only the EXACT path populates the cache (bud is the
                 # effective budget: a ladder downgrade never caches)
                 self._fulfill(misses, method, res,
@@ -594,15 +670,28 @@ class AsyncTopKServer:
         depth = np.asarray(res.depth)
         upper = (np.full((vals.shape[0],), -np.inf, np.float32)
                  if res.upper is None else np.asarray(res.upper))
+        t_merge = time.perf_counter()
         for i, r in enumerate(batch):
             row = (vals[i], ids[i], nsc[i], depth[i], upper[i])
             if cache_token is not None:
                 self.cache.insert((r.u.tobytes(), r.k, cache_token), row)
+            if r.trace is not None:
+                r.trace.span("merge", start=t_merge)
             self._finish_request(r, method, row)
 
     def _finish_request(self, r: _Request, method: str,
                         row: tuple) -> None:
-        stats = self.stats.setdefault(get_engine(method).name, ServeStats())
-        stats.record_request_latency(
-            1e6 * (time.perf_counter() - r.t_enqueue))
+        name = get_engine(method).name
+        stats = self.stats.setdefault(name, ServeStats())
+        us = 1e6 * (time.perf_counter() - r.t_enqueue)
+        stats.record_request_latency(us)
+        obs.on_request_done(name, us)
+        if r.trace is not None:
+            r.trace.finish()
+            # drop the request's reference: callers hold the
+            # PendingResult (hence the _Request) for as long as they
+            # like, and at high sample rates retaining every span tree
+            # through it is real GC pressure — finished traces live
+            # only in the tracer's bounded store
+            r.trace = None
         r.fulfill(row)

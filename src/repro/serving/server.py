@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import SepLRModel, TopKIndex
 from repro.core.engines import (
     CostTable,
@@ -51,6 +52,7 @@ from repro.core.engines import (
     batch_bucket,
     engine_names,
     get_engine,
+    note_pruning_metrics,
     select_engine,
 )
 from repro.core.naive import TopKResult
@@ -63,6 +65,20 @@ Array = jnp.ndarray
 #: for stable p99 at serving rates, bounded so a long-lived server never
 #: grows its stats footprint.
 LATENCY_RING = 512
+
+
+def _batch_hist() -> obs.Histogram:
+    return obs.Histogram("serve_batch_latency_us",
+                         "per-query us of one served batch",
+                         buckets=obs.LATENCY_BUCKETS_US,
+                         ring=LATENCY_RING)
+
+
+def _request_hist() -> obs.Histogram:
+    return obs.Histogram("serve_request_latency_us",
+                         "enqueue->result us of one caller request",
+                         buckets=obs.LATENCY_BUCKETS_US,
+                         ring=LATENCY_RING)
 
 
 @dataclasses.dataclass
@@ -87,6 +103,16 @@ class ServeStats:
     specialisation axis of the batched list scan, DESIGN.md §11) — a
     bucket label appearing here that :meth:`TopKServer.warmup` did not
     warm explains a one-off trace straggler in the latency ring.
+
+    Since the observability layer landed (DESIGN.md §14) the two rings
+    are :class:`repro.obs.Histogram` instances — the registry's shared
+    primitive, with log-scale buckets for export AND the bounded raw
+    ring the exact percentiles read. The public API above is a façade
+    over them and is UNCHANGED: ``lat_us_ring``/``req_lat_us_ring``
+    still expose the underlying deques, percentiles still match
+    ``np.percentile`` over the ring. Counter updates go through a lock
+    (`record_batch`) so concurrent recording threads never lose
+    increments.
     """
 
     n_queries: int = 0
@@ -94,12 +120,14 @@ class ServeStats:
     total_time_s: float = 0.0
     depth_sum: int = 0
     delta_scored: int = 0
-    lat_us_ring: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
-    #: per-REQUEST enqueue→result microseconds (one entry per caller
+    #: per-batch per-query-us histogram (the obs shared primitive;
+    #: its bounded ring backs the exact ``p50_us``/``p95_us``/``p99_us``)
+    lat_hist: obs.Histogram = dataclasses.field(
+        default_factory=_batch_hist, repr=False, compare=False)
+    #: per-REQUEST enqueue→result histogram (one entry per caller
     #: request; honest under coalescing, unlike the per-batch ring)
-    req_lat_us_ring: collections.deque = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_RING))
+    req_lat_hist: obs.Histogram = dataclasses.field(
+        default_factory=_request_hist, repr=False, compare=False)
     sign_batches: Dict[str, int] = dataclasses.field(default_factory=dict)
     #: degradation-ladder decisions taken while serving THIS method
     #: (keyed by rung: "to_norm" / "to_budgeted" / "shed"), recorded on
@@ -111,6 +139,20 @@ class ServeStats:
     #: (certificate gap > 0 — possible under a step budget, never on the
     #: exact path); the CI degradation smoke gates on this being honest
     n_uncertified: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    # -- legacy ring façade --------------------------------------------------
+
+    @property
+    def lat_us_ring(self):
+        """The per-batch latency ring (the histogram's raw-sample
+        deque) — the pre-§14 attribute, kept for callers."""
+        return self.lat_hist.ring()
+
+    @property
+    def req_lat_us_ring(self):
+        return self.req_lat_hist.ring()
 
     @property
     def scores_per_query(self) -> float:
@@ -120,11 +162,33 @@ class ServeStats:
     def us_per_query(self) -> float:
         return 1e6 * self.total_time_s / max(self.n_queries, 1)
 
+    def record_batch(self, n: int, n_scored: int, depth_sum: int,
+                     dt_s: float, delta_scored: int = 0,
+                     sign_label: str = "") -> None:
+        """Fold one served batch in (thread-safe: the async pipeline's
+        harvester and the sync path may both record concurrently)."""
+        with self._lock:
+            self.n_queries += n
+            self.n_scored += n_scored
+            self.depth_sum += depth_sum
+            self.total_time_s += dt_s
+            self.delta_scored += delta_scored
+            if sign_label:
+                self.sign_batches[sign_label] = (
+                    self.sign_batches.get(sign_label, 0) + 1)
+        self.lat_hist.observe(1e6 * dt_s / max(n, 1))
+
+    def bump_degradation(self, rung: str) -> None:
+        with self._lock:
+            self.degradations[rung] = self.degradations.get(rung, 0) + 1
+
+    def note_uncertified(self, n: int) -> None:
+        with self._lock:
+            self.n_uncertified += n
+
     def latency_percentile(self, q: float) -> float:
         """q-th percentile (0-100) of recent per-batch latencies, in us."""
-        if not self.lat_us_ring:
-            return 0.0
-        return float(np.percentile(np.asarray(self.lat_us_ring), q))
+        return self.lat_hist.percentile(q)
 
     @property
     def p50_us(self) -> float:
@@ -141,13 +205,11 @@ class ServeStats:
     def record_request_latency(self, us: float) -> None:
         """One caller request completed ``us`` microseconds after it was
         submitted (enqueue→result, queue wait included)."""
-        self.req_lat_us_ring.append(float(us))
+        self.req_lat_hist.observe(float(us))
 
     def request_percentile(self, q: float) -> float:
         """q-th percentile (0-100) of recent per-REQUEST latencies, us."""
-        if not self.req_lat_us_ring:
-            return 0.0
-        return float(np.percentile(np.asarray(self.req_lat_us_ring), q))
+        return self.req_lat_hist.percentile(q)
 
     @property
     def req_p50_us(self) -> float:
@@ -302,9 +364,16 @@ class TopKServer:
 
     @property
     def mutation_stats(self) -> Dict[str, float]:
-        """Delta/compaction counters for the bench harness and dashboards."""
+        """Delta/compaction counters for the bench harness and dashboards.
+
+        The key set and types are declared ONCE, in
+        :data:`repro.obs.schema.MUTATION_STATS_SCHEMA` (each key
+        documented there); this property just supplies the values —
+        :func:`repro.obs.build_mutation_stats` raises on any drift
+        between the two, so the schema cannot silently rot.
+        """
         cat = self.catalogue
-        return {
+        return obs.build_mutation_stats({
             "n_inserts": cat.stats.n_inserts,
             "n_deletes": cat.stats.n_deletes,
             "n_updates": cat.stats.n_updates,
@@ -336,20 +405,45 @@ class TopKServer:
             "consecutive_build_failures": cat.consecutive_build_failures,
             "current_backoff_s": cat.current_backoff_s,
             "retry_pending": int(cat.retry_pending),
-        }
+        })
 
     def _record(self, method: str, res, dt: float, n: int,
                 delta_scored: int = 0, sign_label: str = ""):
         s = self.stats.setdefault(method, ServeStats())
-        s.n_queries += n
-        s.n_scored += int(np.sum(np.asarray(res.n_scored)))
-        s.depth_sum += int(np.sum(np.asarray(res.depth)))
-        s.total_time_s += dt
-        s.delta_scored += int(delta_scored) * n
-        s.lat_us_ring.append(1e6 * dt / max(n, 1))
-        if sign_label:
-            s.sign_batches[sign_label] = s.sign_batches.get(sign_label,
-                                                            0) + 1
+        n_scored = int(np.sum(np.asarray(res.n_scored)))
+        depth_sum = int(np.sum(np.asarray(res.depth)))
+        s.record_batch(n, n_scored, depth_sum, dt,
+                       int(delta_scored) * n, sign_label)
+        # mirror into the process-wide registry: the live
+        # pruning-efficiency metrics (scored fraction vs the live M)
+        # plus the exported latency histograms (DESIGN.md §14)
+        note_pruning_metrics(method, n, n_scored, depth_sum,
+                             self.catalogue.num_live,
+                             1e6 * dt / max(n, 1), sign_label)
+
+    def _note_certificates(self, req_stats: ServeStats, engine_name: str,
+                           bud: int, res) -> None:
+        """Certificate accounting for one budgeted batch: the legacy
+        per-request ``n_uncertified`` counter PLUS the live registry
+        metrics (certified fraction and mean uncertified gap per
+        (engine, budget-bucket)) — both derived from the same
+        ``upper - values`` gaps :func:`repro.core.certificate_gaps`
+        defines, which tests/test_obs.py pins against."""
+        upper = np.asarray(res.upper)
+        vals = np.asarray(res.values)
+        ids = np.asarray(res.indices)
+        valid = ids >= 0
+        gaps = upper[:, None] - vals
+        unc = np.logical_and(gaps > 0, valid)
+        n_unc_queries = int(np.sum(np.any(unc, axis=1)))
+        req_stats.note_uncertified(n_unc_queries)
+        n_valid = int(np.sum(valid))
+        n_unc = int(np.sum(unc))
+        frac = 1.0 - n_unc / max(n_valid, 1)
+        mean_gap = float(gaps[unc].mean()) if n_unc else 0.0
+        obs.on_uncertified(engine_name, n_unc_queries)
+        obs.on_certificates(engine_name, batch_bucket(int(bud)), frac,
+                            mean_gap, n_unc > 0)
 
     def _shed_result(self, n: int, k: int) -> TopKResult:
         """Sentinel result for a shed chunk: explicitly nothing — ``-inf``
@@ -487,11 +581,12 @@ class TopKServer:
                         - (time.perf_counter() - t_admit))
                     run_eng, bud, rung = self._admit(eng, n, remaining)
                 if rung != "full":
-                    req_stats.degradations[rung] = (
-                        req_stats.degradations.get(rung, 0) + 1)
+                    req_stats.bump_degradation(rung)
+                    obs.on_degradation(engine.name, rung)
                 if run_eng is None:
                     res = self._shed_result(n, int(k))
-                    req_stats.n_uncertified += n
+                    req_stats.note_uncertified(n)
+                    obs.on_uncertified(engine.name, n)
                     outs.append(res)
                     continue
                 if bud is None:
@@ -520,9 +615,7 @@ class TopKServer:
                     (np.asarray(res.values).shape[0],), -np.inf,
                     np.float32))
             if bud is not None:
-                gaps = (res.upper[:, None] - res.values) > 0
-                unc = np.logical_and(gaps, res.indices >= 0)
-                req_stats.n_uncertified += int(np.sum(np.any(unc, axis=1)))
+                self._note_certificates(req_stats, run_eng.name, bud, res)
             # cost model: learn per-query seconds per (engine, budgeted?)
             key = run_eng.name if bud is None else f"{run_eng.name}@budget"
             prev = self._cost_ewma.get(key)
@@ -535,8 +628,9 @@ class TopKServer:
             self._record(run_eng.name, res, dt, n,
                          info.delta_scored, sign_label=label)
             outs.append(res)
-        req_stats.record_request_latency(
-            1e6 * (time.perf_counter() - t_admit))
+        req_us = 1e6 * (time.perf_counter() - t_admit)
+        req_stats.record_request_latency(req_us)
+        obs.on_request_done(engine.name, req_us)
         return jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=0), *outs)
 
