@@ -57,6 +57,8 @@ from repro.core.layout import (
     layout_names,
 )
 from repro.core import faults
+from repro.core.lsm import (DEFAULT_L1_CAPACITY_FACTOR,
+                            ShardedLsmCatalogue)
 from repro.core.naive import (TopKResult, certificate_gaps,
                               certified_counts, naive_topk)
 from repro.core.segments import (
@@ -126,6 +128,8 @@ __all__ = [
     # streaming catalogue subsystem
     "SegmentedCatalogue", "Snapshot", "DeltaSegment", "QueryInfo",
     "SegmentStats", "delta_bucket", "DEFAULT_DELTA_CAPACITY",
+    # LSM ladder (DESIGN.md §15)
+    "ShardedLsmCatalogue", "DEFAULT_L1_CAPACITY_FACTOR",
     # robustness layer (DESIGN.md §12)
     "certificate_gaps", "certified_counts", "faults",
 ]

@@ -94,6 +94,7 @@ Aliases accepted by :func:`get_engine`: ``threshold -> ta``,
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -283,6 +284,45 @@ class CostTable:
         with self._lock:
             return {f"{e}|{b}|{lbl}": v
                     for (e, b, lbl), v in sorted(self._ewma.items())}
+
+    def save(self, path) -> None:
+        """Persist the measured state to ``path`` as JSON (ROADMAP 2b).
+
+        Entries are stored as nested lists — ``[engine, bucket, label,
+        seconds]`` — not the ``"|"``-joined display keys of
+        :meth:`snapshot`, so engine names and sign labels never need
+        un-parsing. A restarted server hands the loaded table to
+        ``TopKServer(cost_table=...)`` and routes by these measurements
+        BEFORE its first observation, instead of cold-starting on the
+        heuristic.
+        """
+        with self._lock:
+            payload = {
+                "alpha": self.alpha,
+                "n_observations": self.n_observations,
+                "ewma": [[e, int(b), lbl, float(v)]
+                         for (e, b, lbl), v in sorted(self._ewma.items())],
+                "engine": {e: float(v)
+                           for e, v in sorted(self._engine.items())},
+            }
+        with open(path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+    @classmethod
+    def load(cls, path) -> "CostTable":
+        """Reconstruct a table saved by :meth:`save`. The loaded EWMAs
+        are live priors: new observations keep folding into them."""
+        with open(path) as fh:
+            payload = json.load(fh)
+        table = cls(alpha=float(payload.get("alpha", 0.2)))
+        with table._lock:
+            for e, b, lbl, v in payload.get("ewma", []):
+                table._ewma[(str(e), int(b), str(lbl))] = float(v)
+            table._engine = {str(e): float(v)
+                             for e, v in payload.get("engine", {}).items()}
+            table.n_observations = int(payload.get("n_observations", 0))
+        return table
 
 
 #: engine name -> the module-level jitted executor

@@ -37,6 +37,10 @@ semantics):
 ``compaction.warm``    raises during the post-build readiness warmup
 ``delta.overflow``     trigger-style (no error): reports the delta as full
                        on an append, forcing an early seal + compaction
+``compaction.fold_l1`` raises inside an L0 -> L1 per-shard fold, before any
+                       slab is touched — the chain stays queryable
+``compaction.promote`` raises at the L1-overflow promotion decision, before
+                       the full base rebuild launches
 ================== ========================================================
 """
 
@@ -192,3 +196,17 @@ def injected(point: str, **kw):
         yield
     finally:
         disarm(point)
+
+
+# LSM-ladder seams (DESIGN.md §15), registered here so tests can arm them
+# before :mod:`repro.core.lsm` is imported. The fold seam fires before any
+# L1 slab is touched, so an injected failure can never half-apply a fold;
+# the promote seam fires at the overflow decision, before the full base
+# rebuild launches.
+FAULT_FOLD_L1 = register_point(
+    "compaction.fold_l1",
+    "raise inside an L0 -> L1 per-shard fold, before any slab is touched")
+FAULT_PROMOTE = register_point(
+    "compaction.promote",
+    "raise at the L1-overflow promotion decision, before the full base "
+    "rebuild launches")

@@ -403,6 +403,19 @@ def build_norm_sharded(targets, index, n_shards: int, mesh=None,
                              ids_sharded=arrays[2], n_shards=n_shards)
 
 
+def round_robin_shares(n: int, n_shards: int, start: int = 0) -> np.ndarray:
+    """Rows each shard receives when ``n`` items are dealt round-robin
+    starting at cursor position ``start`` — the same strided deal
+    :func:`build_norm_sharded` uses for its slabs, reused by the LSM
+    catalogue's L0 -> L1 fold (fit check and the deal itself) so the two
+    shard conventions can never diverge. Returns ``[n_shards] int64``.
+    """
+    shares = np.full((n_shards,), n // n_shards, np.int64)
+    for i in range(n % n_shards):
+        shares[(start + i) % n_shards] += 1
+    return shares
+
+
 _BUILDERS = {
     "row_major": build_row_major,
     "norm_major": build_norm_major,

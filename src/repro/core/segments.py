@@ -84,6 +84,7 @@ from repro.core.driver import NEG_INF, merge_block_into_carry_batched
 from repro.core.engines import (Engine, EngineContext, batch_bucket,
                                 pad_to_bucket)
 from repro.core.naive import TopKResult
+from repro.core.sharded import shard_fold_topk
 
 Array = jnp.ndarray
 
@@ -210,6 +211,15 @@ class SegmentStats:
     n_forced_sync_compactions: int = 0
     n_stuck_builds: int = 0
     max_l0_chain: int = 0
+    # LSM ladder counters (DESIGN.md §15): zero on the single-level
+    # catalogue. Folds are the cheap L0 -> per-shard-L1 moves that
+    # REPLACE most full base rebuilds; their failures have their own
+    # retry/backoff stream (mirroring the build machinery) so the
+    # mutation_stats schema covers both recovery paths.
+    n_l1_folds: int = 0
+    n_failed_l1_folds: int = 0
+    n_l1_fold_retries: int = 0
+    l1_fold_s_total: float = 0.0
 
 
 class Snapshot:
@@ -326,7 +336,7 @@ class DeltaSegment:
         return self._dev
 
 
-def _segmented_tail(base_vals, tomb, base_gids, U, segs, *, k, kb):
+def _segmented_tail(base_vals, tomb, base_gids, U, segs, l1=None, *, k, kb):
     """Drop tombstones from the base top-``kb``, fold in the delta segments.
 
     Pure function of device arrays (jitted per shape by the catalogue's
@@ -349,6 +359,16 @@ def _segmented_tail(base_vals, tomb, base_gids, U, segs, *, k, kb):
     padding is not a drop). The optimistic query path (``kb == k``)
     reads it to decide whether the over-fetched escalation is needed at
     all: 0 dropped means nothing was lost and the result is exact as is.
+
+    ``l1`` is the LSM catalogue's per-shard L1 tier (DESIGN.md §15):
+    ``None`` for the single-level catalogue, else a shard-major stack
+    ``(rows [S, C, R], gids [S, C], live [S, C])`` padded to the FIXED
+    per-shard slab capacity, so the whole tier is one compile shape
+    regardless of occupancy. It folds in through the two-level
+    :func:`repro.core.sharded.shard_fold_topk` merge — each shard's
+    dense block is cut to K locally, then K candidates per shard cross
+    the O(K) sorted merge — before the (newer) L0/delta segments, so the
+    scan-loop merge order mirrors the ladder's age order.
     """
     drop = jnp.logical_or(base_gids < 0, tomb)
     n_dropped = jnp.sum(tomb, axis=1, dtype=jnp.int32)
@@ -362,6 +382,12 @@ def _segmented_tail(base_vals, tomb, base_gids, U, segs, *, k, kb):
             [v, jnp.full((b, k - kb), NEG_INF, v.dtype)], axis=1)
         gi = jnp.concatenate(
             [gi, jnp.full((b, k - kb), -1, gi.dtype)], axis=1)
+    if l1 is not None:
+        l1_rows, l1_gids, l1_live = l1
+        # one [B, R] x [S, C, R] einsum scores every shard's slab densely
+        l1_scores = jnp.einsum("br,scr->sbc", U, l1_rows)
+        l1_scores = jnp.where(l1_live[:, None, :], l1_scores, NEG_INF)
+        v, gi = shard_fold_topk(v, gi, l1_scores, l1_gids, k)
     for rows, gid, live in segs:
         scores = U @ rows.T                   # [B, D] — one dense matmul
         scores = jnp.where(live[None, :], scores, NEG_INF)
@@ -557,6 +583,56 @@ class SegmentedCatalogue:
         """Sealed segments currently awaiting compaction."""
         with self._lock:
             return len(self._frozen)
+
+    # -- L1-tier hooks (no-ops here; the LSM ladder overrides them) ----------
+    #
+    # The single-level catalogue has no L1 tier: these hooks keep the
+    # query/warm/stats plumbing shared with
+    # :class:`repro.core.lsm.ShardedLsmCatalogue` (DESIGN.md §15)
+    # instead of forking the query path.
+
+    def _l1_stack_locked(self):
+        """Stacked per-shard L1 device views, or ``None``. Lock held."""
+        return None
+
+    def _l1_live_locked(self) -> int:
+        """Live rows resident in the L1 tier. Lock held."""
+        return 0
+
+    def _warm_l1_variants(self):
+        """L1 operands :meth:`warm` compiles tails for: ``(spec, dummy)``
+        pairs, where the single-level catalogue has only the no-tier
+        variant."""
+        return (((), None),)
+
+    @property
+    def n_shards(self) -> int:
+        """L1 shard count (0: single-level, no L1 tier)."""
+        return 0
+
+    @property
+    def l1_rows(self) -> int:
+        """Live rows currently resident in the per-shard L1 tier."""
+        return 0
+
+    @property
+    def consecutive_fold_failures(self) -> int:
+        """Current L0->L1 fold failure streak (0 on a healthy ladder)."""
+        return 0
+
+    @property
+    def fold_backoff_s(self) -> float:
+        """Backoff the next ordinary fold retry is waiting out."""
+        return 0.0
+
+    def _chain_pressure_locked(self) -> int:
+        """Sealed segments counted against ``max_l0_segments``. The LSM
+        ladder overrides this to EXCLUDE L1 runs parked in the chain by
+        an in-flight promotion: back-pressure exists to bound the extra
+        per-query dense scans a FAILING build accumulates, and a
+        promotion scans the same rows queries were already scoring
+        through the stacked L1 path — no new pressure. Lock held."""
+        return len(self._frozen)
 
     @property
     def consecutive_build_failures(self) -> int:
@@ -794,7 +870,7 @@ class SegmentedCatalogue:
         attempts = 0
         while True:
             with self._lock:
-                if len(self._frozen) <= self.max_l0_segments:
+                if self._chain_pressure_locked() <= self.max_l0_segments:
                     return
                 t = self._build_thread
                 if t is None:
@@ -867,6 +943,16 @@ class SegmentedCatalogue:
                 return
         snap = self._snapshot
         folding = list(self._frozen)
+        # pending_dead means "kill this gid in the snapshot CURRENTLY
+        # being built, whose capture predates the kill". The capture
+        # below (no build is in flight here) reflects every kill so far,
+        # so entries recorded against an EARLIER (failed) build are
+        # stale — and a stale entry is not merely redundant: if the gid
+        # was re-appended under an update since the kill, the live new
+        # copy lands in this capture and the stale entry would wrongly
+        # kill it at swap. Only kills landing AFTER this point belong in
+        # the set.
+        self._pending_dead.clear()
         new_rows, new_gids = self._live_concat_locked(snap, folding)
         new_rows = np.ascontiguousarray(new_rows)
         if new_rows.shape[0] == 0:
@@ -1070,7 +1156,12 @@ class SegmentedCatalogue:
             with self._lock:
                 if not first and not self._frozen:
                     return
-                fails_before = self.stats.n_failed_compactions
+                # fold failures count too: on the LSM ladder a failed
+                # L0->L1 fold leaves the chain in place exactly like a
+                # failed build, and wait=True must surface it instead of
+                # spinning against an armed fold fault
+                fails_before = (self.stats.n_failed_compactions
+                                + self.stats.n_failed_l1_folds)
                 # force=True: an explicit compact() call outranks the
                 # failure backoff gate (and wait=True would otherwise
                 # spin forever against it)
@@ -1084,7 +1175,8 @@ class SegmentedCatalogue:
             with self._lock:
                 if not self._frozen:
                     return
-                if self.stats.n_failed_compactions > fails_before:
+                if (self.stats.n_failed_compactions
+                        + self.stats.n_failed_l1_folds) > fails_before:
                     raise RuntimeError(
                         "compaction build failed; sealed segments remain "
                         "queryable and will be refolded"
@@ -1112,21 +1204,26 @@ class SegmentedCatalogue:
     # -- query ---------------------------------------------------------------
 
     def _compiled_tail(self, k: int, kb: int, bucket: int,
-                       seg_buckets: Tuple[int, ...]):
+                       seg_buckets: Tuple[int, ...],
+                       l1_spec: Tuple[int, ...] = ()):
         # no snapshot version in the key: the tail's inputs are all
         # batch-shaped, so one compile serves every snapshot. The
         # check-then-insert and the trace counter run under the lock so
         # concurrent readers neither double-compile a shape nor lose
         # counter increments (the 0-retrace warmup assertions read them).
-        key = (int(k), int(kb), int(bucket), seg_buckets)
+        # ``l1_spec`` is the stacked L1 tier's (n_shards, slab-capacity)
+        # — a FIXED pair per LSM catalogue, so the ladder adds exactly
+        # one extra tail shape per (k, kb, bucket, segs) combination.
+        key = (int(k), int(kb), int(bucket), seg_buckets, tuple(l1_spec))
         with self._lock:
             fn = self._tail_cache.get(key)
             if fn is None:
-                def traced(bv, tomb, bg, U, segs, _k=int(k), _kb=int(kb)):
+                def traced(bv, tomb, bg, U, segs, l1,
+                           _k=int(k), _kb=int(kb)):
                     with self._lock:
                         self.trace_counts["segmented_tail"] = (
                             self.trace_counts.get("segmented_tail", 0) + 1)
-                    return _segmented_tail(bv, tomb, bg, U, segs,
+                    return _segmented_tail(bv, tomb, bg, U, segs, l1,
                                            k=_k, kb=_kb)
 
                 fn = jax.jit(traced)
@@ -1161,10 +1258,12 @@ class SegmentedCatalogue:
             snap = self._snapshot
             segs = [s for s in self._segments() if s.count > 0]
             views = tuple(s.device_view() for s in segs)
-            n_delta_live = sum(s.n_live for s in segs)
+            l1 = self._l1_stack_locked()      # None: no L1 tier / empty
+            n_delta_live = (sum(s.n_live for s in segs)
+                            + self._l1_live_locked())
             n_dead = snap.n_dead
             dead_dev, gids_dev = snap.dead_dev, snap.gids_dev
-        if not views and n_dead == 0 and snap.identity:
+        if not views and l1 is None and n_dead == 0 and snap.identity:
             # never-mutated fast path: byte-identical to the static server
             res = engine.run(snap.ctx, U, k, budget=budget)
             return res, QueryInfo(0, min(int(k), snap.num_rows), 0,
@@ -1175,6 +1274,8 @@ class SegmentedCatalogue:
         bucket = batch_bucket(b)
         U_dev = pad_to_bucket(U_dev)          # same rule as the engine cache
         seg_buckets = tuple(int(v[0].shape[0]) for v in views)
+        l1_spec = () if l1 is None else tuple(int(d) for d in
+                                              l1[0].shape[:2])
 
         mb = snap.num_rows
 
@@ -1186,8 +1287,9 @@ class SegmentedCatalogue:
             safe = jnp.clip(res.indices, 0, max(mb - 1, 0))
             tomb = jnp.logical_and(res.indices >= 0, dead_dev[safe])
             bg = jnp.where(res.indices >= 0, gids_dev[safe], -1)
-            fn = self._compiled_tail(k, kb, bucket, seg_buckets)
-            vals, gids, dropped = fn(res.values, tomb, bg, U_dev, views)
+            fn = self._compiled_tail(k, kb, bucket, seg_buckets, l1_spec)
+            vals, gids, dropped = fn(res.values, tomb, bg, U_dev, views,
+                                     l1)
             return res, vals, gids, dropped
 
         # Tombstone-adaptive base fetch: plain k while the snapshot has no
@@ -1277,23 +1379,34 @@ class SegmentedCatalogue:
                 bv = jnp.zeros((bucket, kb_w), jnp.float32)
                 tomb = jnp.zeros((bucket, kb_w), bool)
                 bg = jnp.zeros((bucket, kb_w), jnp.int32)
-                # post-compaction pristine-but-nonidentity tail (no segs)
-                fn = self._compiled_tail(k, kb_w, bucket, ())
-                jax.block_until_ready(fn(bv, tomb, bg, U, ()))
-                for d in self.delta_buckets():
-                    fn = self._compiled_tail(k, kb_w, bucket, (d,))
-                    jax.block_until_ready(
-                        fn(bv, tomb, bg, U, (dummy_seg(d),)))
-                # while a background compaction is in flight queries see
-                # TWO segments: the frozen delta (sealed views present
-                # the capacity bucket) plus the active delta at any
-                # bucket
-                frozen = dummy_seg(self.delta_capacity)
-                for d in self.delta_buckets():
-                    fn = self._compiled_tail(
-                        k, kb_w, bucket, (self.delta_capacity, d))
-                    jax.block_until_ready(
-                        fn(bv, tomb, bg, U, (frozen, dummy_seg(d))))
+                # every tail shape is warmed with AND without the L1
+                # tier operand (one extra variant on the LSM ladder —
+                # the stacked tier is a single fixed shape, so folds
+                # never add tail compiles)
+                for l1_spec, l1_dummy in self._warm_l1_variants():
+                    # post-compaction pristine-but-nonidentity tail
+                    # (no segs)
+                    fn = self._compiled_tail(k, kb_w, bucket, (), l1_spec)
+                    jax.block_until_ready(fn(bv, tomb, bg, U, (),
+                                             l1_dummy))
+                    for d in self.delta_buckets():
+                        fn = self._compiled_tail(k, kb_w, bucket, (d,),
+                                                 l1_spec)
+                        jax.block_until_ready(
+                            fn(bv, tomb, bg, U, (dummy_seg(d),),
+                               l1_dummy))
+                    # while a background compaction is in flight queries
+                    # see TWO segments: the frozen delta (sealed views
+                    # present the capacity bucket) plus the active delta
+                    # at any bucket
+                    frozen = dummy_seg(self.delta_capacity)
+                    for d in self.delta_buckets():
+                        fn = self._compiled_tail(
+                            k, kb_w, bucket, (self.delta_capacity, d),
+                            l1_spec)
+                        jax.block_until_ready(
+                            fn(bv, tomb, bg, U, (frozen, dummy_seg(d)),
+                               l1_dummy))
         if engines and kb_esc > kb:
             snap.ctx.warmup(kb_esc, batch_sizes=batch_sizes,
                             engines=engines, m_buckets=m_buckets,

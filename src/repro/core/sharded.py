@@ -52,6 +52,30 @@ Array = jnp.ndarray
 NEG_INF = float("-inf")
 
 
+def shard_fold_topk(carry_vals: Array, carry_ids: Array,
+                    scores: Array, gids: Array, k: int):
+    """Two-level exact merge of shard-major stacked score blocks — the
+    mesh-free counterpart of :func:`hierarchical_merge_topk`, used inside
+    a host-side scan loop (the LSM catalogue's L1 tier, DESIGN.md §15).
+
+    ``scores [S, B, C]`` are one dense block per shard over the SAME
+    query batch; ``gids [S, C]`` (or per-lane ``[S, B, C]``) carry
+    global ids with ``-1`` marking dead/padding lanes (already masked to
+    ``-inf`` in ``scores`` by the caller). Level 1 cuts each shard's
+    block to ``K`` candidates (the block-local ``top_k`` inside
+    :func:`repro.core.driver.merge_block_into_carry_batched`); level 2
+    folds the per-shard candidate lists through the O(K) sorted merge —
+    so only ``K`` candidates per shard ever cross the merge boundary,
+    the same communication shape the mesh version's all-gather carries.
+    Exact for the same reason as every sharded strategy here: the global
+    top-K is contained in the union of per-shard top-Ks.
+    """
+    for s in range(scores.shape[0]):
+        carry_vals, carry_ids = merge_block_into_carry_batched(
+            carry_vals, carry_ids, scores[s], gids[s], k)
+    return carry_vals, carry_ids
+
+
 def compat_shard_map(f, mesh, in_specs, out_specs):
     """``shard_map`` across the jax API split.
 

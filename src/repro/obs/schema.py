@@ -83,6 +83,26 @@ MUTATION_STATS_SCHEMA: Dict[str, StatField] = {
         float, "backoff the next automatic retry is waiting out"),
     "retry_pending": StatField(
         int, "1 while an automatic post-failure retry timer is armed"),
+    # -- LSM ladder (DESIGN.md §15) -----------------------------------------
+    # all zero on the single-level catalogue (the base-class hooks
+    # return neutral values), so one schema covers both catalogues
+    "n_shards": StatField(
+        int, "L1 shard-run count (0: single-level, no L1 tier)"),
+    "l1_rows": StatField(
+        int, "live rows currently resident in the per-shard L1 tier"),
+    "n_l1_folds": StatField(
+        int, "successful L0 -> L1 folds (the cheap moves that replace "
+             "most full base rebuilds)"),
+    "n_failed_l1_folds": StatField(
+        int, "folds that raised (chain retained + queryable, no loss)"),
+    "n_l1_fold_retries": StatField(
+        int, "fold attempts made after >= 1 consecutive fold failure"),
+    "l1_fold_s_total": StatField(
+        float, "wall-clock seconds spent in successful folds"),
+    "consecutive_fold_failures": StatField(
+        int, "current L0 -> L1 fold failure streak (0 when healthy)"),
+    "fold_backoff_s": StatField(
+        float, "backoff the next ordinary fold retry is waiting out"),
 }
 
 

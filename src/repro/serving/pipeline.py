@@ -251,12 +251,19 @@ class AsyncTopKServer:
                  method: str = "auto",
                  block_size: int = 256, delta_capacity: int = 256,
                  compact_async: bool = False,
-                 policy: Optional[AdmissionPolicy] = None):
+                 policy: Optional[AdmissionPolicy] = None,
+                 n_shards: int = 0, l1_capacity: Optional[int] = None,
+                 cost_table=None):
+        # n_shards > 0 fronts the async pipeline with the sharded LSM
+        # ladder; cost_table accepts a pre-measured CostTable.load so a
+        # restarted pipeline routes before its first observation
         self.server = TopKServer(model, max_batch=max_batch,
                                  block_size=block_size,
                                  delta_capacity=delta_capacity,
                                  compact_async=compact_async,
-                                 policy=policy)
+                                 policy=policy, n_shards=n_shards,
+                                 l1_capacity=l1_capacity,
+                                 cost_table=cost_table)
         self.max_batch = batch_bucket(max(int(max_batch), 1))
         self.flush_ms = float(flush_ms)
         self.pipeline_depth = max(int(pipeline_depth), 1)

@@ -55,6 +55,7 @@ from repro.core.engines import (
     note_pruning_metrics,
     select_engine,
 )
+from repro.core.lsm import ShardedLsmCatalogue
 from repro.core.naive import TopKResult
 from repro.core.segments import SegmentedCatalogue
 from repro.core.strategies import sign_bucket_label
@@ -255,18 +256,43 @@ class TopKServer:
     def __init__(self, model: SepLRModel, max_batch: int = 64,
                  block_size: int = 256, delta_capacity: int = 256,
                  compact_async: bool = False,
-                 policy: Optional[AdmissionPolicy] = None):
+                 policy: Optional[AdmissionPolicy] = None,
+                 n_shards: int = 0,
+                 l1_capacity: Optional[int] = None,
+                 max_tombstones: Optional[int] = None,
+                 cost_table: Optional[CostTable] = None):
         self.model = model
         # per-(engine, batch-bucket, sign-bucket) measured serve cost:
         # the serving router's table (select_engine consults it through
         # the context) and the admission ladder's fallback. Passed into
         # the catalogue's ctx_kwargs so every compaction-built context
-        # SHARES it — measurements survive snapshot swaps.
-        self.cost_table = CostTable()
-        self.catalogue = SegmentedCatalogue(
-            model.targets, delta_capacity=delta_capacity,
-            compact_async=compact_async, block_size=block_size,
-            cost_table=self.cost_table)
+        # SHARES it — measurements survive snapshot swaps. A caller may
+        # hand in a pre-measured table (CostTable.load) so a RESTARTED
+        # server routes by measured costs before its first observation.
+        self.cost_table = cost_table if cost_table is not None \
+            else CostTable()
+        # n_shards > 0 fronts the model with the LSM ladder
+        # (DESIGN.md §15): per-shard L1 runs absorb most compactions as
+        # cheap folds, full base rebuilds only on tier overflow
+        # max_tombstones=None keeps the catalogue default
+        # (2 * delta_capacity); large catalogues want an absolute cap
+        # sized to M — the §9 over-fetch costs O(n_dead) per query while
+        # a tombstone-triggered rebuild costs O(M), so at M >> capacity
+        # the default forces full rebuilds to clear a vanishing dead
+        # fraction
+        tomb = {} if max_tombstones is None \
+            else {"max_tombstones": max_tombstones}
+        if n_shards > 0:
+            self.catalogue: SegmentedCatalogue = ShardedLsmCatalogue(
+                model.targets, n_shards=n_shards, l1_capacity=l1_capacity,
+                delta_capacity=delta_capacity,
+                compact_async=compact_async, block_size=block_size,
+                cost_table=self.cost_table, **tomb)
+        else:
+            self.catalogue = SegmentedCatalogue(
+                model.targets, delta_capacity=delta_capacity,
+                compact_async=compact_async, block_size=block_size,
+                cost_table=self.cost_table, **tomb)
         self.max_batch = max_batch
         self.block_size = block_size
         self.stats: Dict[str, ServeStats] = {}
@@ -405,6 +431,16 @@ class TopKServer:
             "consecutive_build_failures": cat.consecutive_build_failures,
             "current_backoff_s": cat.current_backoff_s,
             "retry_pending": int(cat.retry_pending),
+            # LSM ladder (DESIGN.md §15): all zero on the single-level
+            # catalogue — the base-class hooks return the neutral values
+            "n_shards": cat.n_shards,
+            "l1_rows": cat.l1_rows,
+            "n_l1_folds": cat.stats.n_l1_folds,
+            "n_failed_l1_folds": cat.stats.n_failed_l1_folds,
+            "n_l1_fold_retries": cat.stats.n_l1_fold_retries,
+            "l1_fold_s_total": cat.stats.l1_fold_s_total,
+            "consecutive_fold_failures": cat.consecutive_fold_failures,
+            "fold_backoff_s": cat.fold_backoff_s,
         })
 
     def _record(self, method: str, res, dt: float, n: int,

@@ -116,6 +116,38 @@ def test_streaming_sweep_smoke():
         assert json.load(f) == rows
 
 
+@pytest.mark.slow
+def test_streaming_lsm_sweep_smoke():
+    """Tier-2 benchmark smoke: the LSM-ladder sweep (DESIGN.md §15) at
+    quick M with just enough rounds to overflow the delta — the ladder
+    side must absorb the overflow with L1 folds (zero full rebuilds)
+    while the single-level side rebuilds, every stored query verified
+    against the incremental array oracle, and the §10/§15 compile
+    contract holds."""
+    # scratch name: results/bench/streaming_lsm.json is the committed
+    # 1M artifact the CI lsm job gates on
+    from benchmarks import streaming_lsm
+    rows = streaming_lsm.run(quick=True, rounds=12,
+                             save_as="streaming_lsm_smoke")
+    assert rows, "sweep produced no rows"
+    bad = [r["M"] for r in rows if not r["exact_verified"]]
+    assert not bad, f"ladder results diverged from the oracle: {bad}"
+    required = {"M", "n_shards", "exact_verified", "full_rebuilds_lsm",
+                "full_rebuilds_single_level", "rebuild_amortisation",
+                "n_l1_folds", "l1_fold_s_total", "wall_s_lsm",
+                "wall_s_single_level", "engine_compiles_per_compaction",
+                "l1_rows_final", "delta_capacity"}
+    assert all(required <= set(r) for r in rows)
+    for r in rows:
+        assert r["n_l1_folds"] >= 1             # overflows DID fold
+        assert r["full_rebuilds_lsm"] == 0      # ...and never rebuilt
+        assert r["full_rebuilds_single_level"] >= 1
+        assert r["engine_compiles_per_compaction"] == 0
+    with open(os.path.join("results", "bench",
+                           "streaming_lsm_smoke.json")) as f:
+        assert json.load(f) == rows
+
+
 def test_bta_engines_close_to_ta():
     from benchmarks import bta_tpu
     rows = bta_tpu.run(quick=True)

@@ -447,3 +447,71 @@ def test_partial_engine_item_counts_equal_ta():
         np.testing.assert_array_equal(
             np.asarray(r_p.n_scored), np.asarray(r_ta.n_scored),
             err_msg=regime)
+
+
+# ---------------------------------------------------------------------------
+# CostTable persistence (ROADMAP 2b): a restarted server routes by
+# measured costs before any observation, across snapshot swaps
+# ---------------------------------------------------------------------------
+
+
+def test_cost_table_save_load_roundtrip(tmp_path):
+    from repro.core import CostTable
+
+    t = CostTable(alpha=0.3)
+    t.observe("norm", 1, "", 2e-4)
+    t.observe("norm", 1, "", 1e-4)        # EWMA folds, not overwrites
+    t.observe("ta", 64, "POS:5", 3e-4)
+    path = tmp_path / "costs.json"
+    t.save(path)
+    t2 = CostTable.load(path)
+    assert t2.alpha == t.alpha
+    assert t2.n_observations == t.n_observations == 3
+    assert t2.snapshot() == t.snapshot()
+    assert t2.predict("ta", 64, "POS:5") == t.predict("ta", 64, "POS:5")
+    assert t2.engine_cost("norm") == t.engine_cost("norm")
+    # loaded EWMAs are live priors: new observations keep folding in
+    before = t2.predict("norm", 1, "")
+    t2.observe("norm", 1, "", 9e-4)
+    assert t2.predict("norm", 1, "") != before
+
+
+def test_loaded_cost_table_routes_before_any_measurement(tmp_path):
+    """The restart story: a table measured in a previous process routes
+    the auto policy from disk BEFORE this process observes anything —
+    and keeps routing after a compaction swaps the snapshot (every
+    compaction-built context shares the one table instance)."""
+    from repro.core import CostTable, SepLRModel
+    from repro.core.engines import auto_candidates, cost_label
+    from repro.serving.server import TopKServer
+
+    rng = np.random.default_rng(91)
+    T = rng.standard_normal((120, 8)).astype(np.float32)
+    U = rng.standard_normal((1, 8)).astype(np.float32)
+    probe = EngineContext(T, block_size=16)
+    # "previous process": granular measurements for every auto candidate
+    # at this batch's (bucket, sign) — ta measured cheapest, which the
+    # cold heuristic would never pick for a dense B=1 batch
+    prev = CostTable()
+    for i, name in enumerate(auto_candidates()):
+        lbl = cost_label(get_engine(name), probe, U)
+        cost = 1e-5 if name == "ta" else (i + 2) * 1e-3
+        prev.observe(name, batch_bucket(1), lbl, cost)
+    path = tmp_path / "costs.json"
+    prev.save(path)
+
+    loaded = CostTable.load(path)
+    srv = TopKServer(SepLRModel(T), block_size=16, delta_capacity=8,
+                     cost_table=loaded)
+    assert srv.cost_table is loaded
+    assert loaded.n_observations == len(auto_candidates())
+    picked = select_engine(srv.ctx, U)
+    assert picked.name == "ta"            # measured route, not heuristic
+    # ...and the measurements survive a snapshot swap: the compaction
+    # builds a NEW context around the SAME shared table
+    v0 = srv.catalogue.version
+    srv.add_targets(rng.standard_normal((9, 8)).astype(np.float32))
+    srv.catalogue.compact(wait=True)
+    assert srv.catalogue.version > v0
+    assert srv.ctx.cost_table is loaded
+    assert select_engine(srv.ctx, U).name == "ta"

@@ -301,3 +301,142 @@ def test_auto_retry_timer_heals_a_quiet_catalogue():
     assert cat.l0_chain_len == 0          # healed hands-off
     assert cat.consecutive_build_failures == 0
     assert cat.stats.n_compactions == 1
+
+
+# -- LSM ladder seams (DESIGN.md §15) ----------------------------------------
+
+def _lsm(rng, m=64, **kw):
+    from repro.core import ShardedLsmCatalogue
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("delta_capacity", 4)
+    kw.setdefault("l1_capacity", 64)
+    kw.setdefault("compact_async", False)
+    kw.setdefault("build_backoff_s", 0.0)
+    kw.setdefault("block_size", 16)
+    return ShardedLsmCatalogue(_base(rng, m), **kw)
+
+
+def test_consecutive_fold_failures_chain_stays_exact():
+    """N consecutive injected L0 -> L1 fold failures: nothing is lost,
+    the sealed chain keeps growing AND keeps answering exactly, and the
+    first healthy fold drains it wholesale."""
+    rng = _rng(31)
+    cat = _lsm(rng)
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    faults.arm("compaction.fold_l1", error=RuntimeError, times=3)
+    for i in range(3):
+        cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+        assert cat.stats.n_failed_l1_folds == i + 1
+        assert cat.consecutive_fold_failures == i + 1
+        assert cat.l0_chain_len >= 1          # chain retained, queryable
+        assert cat.l1_rows == 0               # nothing reached L1 yet
+        assert_exact(cat, U)
+    assert cat.stats.n_l1_fold_retries >= 2   # attempts 2 and 3 were retries
+    assert isinstance(cat.last_fold_error, RuntimeError)
+    # fault exhausted (times=3): the next overflow folds the WHOLE chain
+    cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+    assert cat.stats.n_l1_folds >= 1
+    assert cat.consecutive_fold_failures == 0
+    assert cat.fold_backoff_s == 0.0
+    assert cat.l0_chain_len == 0
+    assert cat.l1_rows > 0
+    assert cat.stats.n_compactions == 0       # no full rebuild was needed
+    assert_exact(cat, U)
+
+
+def test_fold_failure_backoff_gates_ordinary_folds():
+    """After >= 2 consecutive fold failures a non-forced fold waits out
+    an exponential backoff instead of hammering the failing seam."""
+    rng = _rng(32)
+    cat = _lsm(rng, build_backoff_s=30.0, build_backoff_max_s=60.0)
+    faults.arm("compaction.fold_l1", error=RuntimeError, times=2)
+    for _ in range(2):
+        cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+    assert cat.consecutive_fold_failures == 2
+    assert cat.fold_backoff_s >= 30.0
+    chain = cat.l0_chain_len
+    # fault is exhausted, but the backoff gate holds the ordinary fold
+    cat.add_targets(rng.standard_normal((5, R)).astype(np.float32))
+    assert cat.stats.n_l1_folds == 0
+    assert cat.l0_chain_len > chain
+    assert_exact(cat, rng.standard_normal((1, R)).astype(np.float32))
+
+
+def test_promote_fault_is_a_build_failure_and_tier_survives():
+    """compaction.promote fires BEFORE anything moves: a failed
+    promotion is recorded as a build failure, every tier keeps serving,
+    and the healed retry flattens the ladder completely."""
+    rng = _rng(33)
+    cat = _lsm(rng)
+    cat.add_targets(rng.standard_normal((9, R)).astype(np.float32))
+    assert cat.l1_rows > 0                    # ladder populated
+    U = rng.standard_normal((2, R)).astype(np.float32)
+    faults.arm("compaction.promote", error=RuntimeError, times=1)
+    with pytest.raises(RuntimeError):
+        cat.promote(wait=True)
+    assert cat.stats.n_failed_compactions == 1
+    assert cat.l1_rows > 0                    # nothing moved, nothing lost
+    assert_exact(cat, U)
+    cat.promote(wait=True)                    # healed
+    assert cat.l1_rows == 0 and cat.l0_chain_len == 0
+    assert cat.stats.n_compactions >= 1
+    assert_exact(cat, U)
+
+
+def test_lsm_stats_flow_through_mutation_schema():
+    """The ladder's retry/backoff stats extend mutation_stats WITHOUT
+    schema drift: the produced dict matches MUTATION_STATS_SCHEMA
+    exactly, and both drift directions are hard errors."""
+    from repro.core import SepLRModel
+    from repro.obs.schema import MUTATION_STATS_SCHEMA, build_mutation_stats
+    from repro.serving.server import TopKServer
+
+    rng = _rng(34)
+    srv = TopKServer(SepLRModel(_base(rng, 48)), n_shards=4,
+                     delta_capacity=4, compact_async=False, block_size=16)
+    srv.add_targets(_base(rng, 10))           # at least one fold happened
+    stats = srv.mutation_stats
+    assert set(stats) == set(MUTATION_STATS_SCHEMA)
+    assert stats["n_shards"] == 4
+    assert stats["n_l1_folds"] >= 1
+    assert build_mutation_stats(stats) == stats
+    with pytest.raises(KeyError):             # a key going missing
+        build_mutation_stats({k: v for k, v in stats.items()
+                              if k != "fold_backoff_s"})
+    with pytest.raises(KeyError):             # an undeclared key appearing
+        build_mutation_stats({**stats, "surprise": 1})
+    # the single-level server reports neutral ladder values through the
+    # SAME schema — one shape covers both catalogues
+    flat = TopKServer(SepLRModel(_base(rng, 32)), delta_capacity=8,
+                      block_size=16)
+    fs = flat.mutation_stats
+    assert fs["n_shards"] == 0 and fs["l1_rows"] == 0
+    assert build_mutation_stats(fs) == fs
+
+
+def test_stale_pending_dead_does_not_kill_updated_row():
+    """Regression: a kill recorded while the gid sat in a chain retained
+    by a FAILED build used to leave a stale pending-dead entry; when the
+    gid was re-appended via update before the next successful build, the
+    swap wrongly killed the live new copy. The capture now clears the
+    set (it already reflects every kill landed so far)."""
+    rng = _rng(35)
+    cat = SegmentedCatalogue(_base(rng, 32), delta_capacity=4,
+                             compact_async=False, build_backoff_s=0.0,
+                             block_size=16)
+    gids = cat.add_targets(rng.standard_normal((4, R)).astype(np.float32))
+    faults.arm("compaction.build", error=RuntimeError, times=1)
+    with pytest.raises(RuntimeError):
+        cat.compact(wait=True)                # chain retained by the failure
+    assert cat.l0_chain_len >= 1
+    victim = int(gids[0])
+    new_row = np.full((1, R), 3.0, np.float32)   # unmistakable top-1
+    cat.update_targets([victim], new_row)     # kill-in-frozen + re-append
+    n_live = cat.num_live
+    cat.compact(wait=True)                    # healed build swaps in
+    assert cat.num_live == n_live             # the new copy SURVIVED the swap
+    res, _ = cat.query(get_engine("norm"), np.ones((1, R), np.float32), 1)
+    assert int(np.asarray(res.indices)[0, 0]) == victim
+    np.testing.assert_allclose(np.asarray(res.values)[0, 0], 3.0 * R,
+                               rtol=1e-5)
+    assert_exact(cat, rng.standard_normal((2, R)).astype(np.float32))

@@ -362,3 +362,45 @@ def test_async_request_span_joins_compaction_event():
         # the registry saw the same request on its always-on counters
         assert obs.QUERIES.value(engine="bta") >= 1
         assert obs.REQUEST_LATENCY.count(engine="bta") >= 1
+
+
+def test_async_request_span_joins_fold_event():
+    """Same join discipline across the LSM ladder: an L0 -> L1 fold
+    journals compaction.fold_l1 with the SAME (version, epoch) join keys
+    as compaction.success, and a traced request that ran against the
+    folded catalogue joins to it. A fold moves rows without changing
+    visible contents, so it must NOT bump the epoch — the request's
+    device span carries the very same (version, epoch) the fold event
+    recorded."""
+    from repro.core import ShardedLsmCatalogue
+
+    rng = np.random.default_rng(23)
+    T = rng.standard_normal((113, 7)).astype(np.float32)
+    with AsyncTopKServer(SepLRModel(T), max_batch=8, delta_capacity=8,
+                         method="bta", n_shards=4) as srv:
+        assert isinstance(srv.server.catalogue, ShardedLsmCatalogue)
+        srv.warmup(4)
+        obs.reset()   # drop warmup noise; keep the layer on
+        # stage rows below capacity, then compact: the ladder seals the
+        # delta and folds it into L1 inline (no full rebuild, no build
+        # thread) — and, because a fold changes no visible contents, no
+        # epoch bump either
+        srv.add_targets(rng.standard_normal((5, 7)).astype(np.float32))
+        srv.server.catalogue.compact(wait=True)
+        folds = obs.JOURNAL.events("compaction.fold_l1")
+        assert folds, "overflow must have folded, not rebuilt"
+        assert not obs.JOURNAL.events("compaction.success")
+        ev = folds[-1].fields
+        assert ev["rows_folded"] >= 1 and ev["l1_rows"] >= 1
+        h = srv.submit(rng.standard_normal(7).astype(np.float32), 4)
+        h.result(timeout=30)
+        t = obs.TRACER.traces()[-1]
+        dev = t.find("device")
+        # the JOIN, both keys: the request ran against exactly the
+        # (version, epoch) the fold event was journalled under
+        assert dev.attrs["version"] == ev["version"]
+        assert dev.attrs["epoch"] == ev["epoch"]
+        joined = obs.JOURNAL.events("compaction.fold_l1",
+                                    version=dev.attrs["version"],
+                                    epoch=dev.attrs["epoch"])
+        assert joined and joined[-1].fields == ev
